@@ -1,0 +1,43 @@
+"""Paper Table 5: execution-time breakdown (sampling / update-theta /
+update-phi) — each phase jitted separately and timed on CPU."""
+import functools
+
+from .common import emit, timeit
+
+
+def run():
+    import jax
+    import jax.numpy as jnp
+    from repro.core import sampler, trainer, updates
+    from repro.core.corpus import ell_capacity, tile_corpus
+    from repro.data.synthetic import zipf_corpus
+
+    corpus = zipf_corpus(num_docs=128, num_words=800, avg_doc_len=100, seed=0)
+    K = 256
+    cfg = trainer.LDAConfig(num_topics=K, tile_tokens=64, tiles_per_step=16,
+                            ell_capacity=ell_capacity(corpus, K))
+    shard = tile_corpus(corpus, 1, 64)[0]
+    key = jax.random.key(0)
+    state = trainer.init_state(cfg, shard, key)
+    theta = updates.theta_from_z(state.z, shard.token_doc, shard.token_mask,
+                                 shard.num_docs_local, K)
+    cnts, tpcs, _ = updates.theta_to_ell(theta, cfg.ell_capacity)
+
+    sample = jax.jit(lambda z: sampler.sample_sweep(
+        state.phi_vk, state.phi_sum, shard.tile_word, shard.token_doc,
+        shard.token_mask, z, cnts, tpcs, key,
+        alpha=cfg.resolved_alpha(), beta=cfg.beta,
+        num_words_total=corpus.num_words, tiles_per_step=16)[0])
+    upd_theta = jax.jit(lambda z: jax.lax.top_k(updates.theta_from_z(
+        z, shard.token_doc, shard.token_mask, shard.num_docs_local, K),
+        cfg.ell_capacity)[0])
+    upd_phi = jax.jit(lambda z: updates.phi_from_z(
+        z, shard.tile_word, shard.token_mask, corpus.num_words, K))
+
+    t_s = timeit(sample, state.z)
+    t_t = timeit(upd_theta, state.z)
+    t_p = timeit(upd_phi, state.z)
+    tot = t_s + t_t + t_p
+    emit("table5_sampling", t_s, f"share={t_s / tot:.1%};paper=79-88%")
+    emit("table5_update_theta", t_t, f"share={t_t / tot:.1%};paper=8-11%")
+    emit("table5_update_phi", t_p, f"share={t_p / tot:.1%};paper=2-10%")

@@ -1,0 +1,27 @@
+"""§Roofline: render the three-term roofline per (arch x shape) from the
+dry-run artifacts in results/ (see repro.launch.roofline for the math)."""
+import json
+import os
+
+from .common import emit
+
+
+def run():
+    path = "results/final/dryrun_single.json"
+    if not os.path.exists(path):
+        path = "results/dryrun_baseline.json"
+    if not os.path.exists(path):
+        emit("roofline", 0.0, "no dryrun artifacts yet — run repro.launch.dryrun")
+        return
+    from repro.launch.roofline import analyze_cell
+
+    with open(path) as f:
+        cells = json.load(f)
+    for c in cells:
+        if c.get("status") != "ok" or "costs" not in c:
+            continue
+        r = analyze_cell(c)
+        emit(f"roofline_{c['arch']}_{c['shape']}", 0.0,
+             f"compute_s={r['t_compute']:.3e};memory_s={r['t_memory']:.3e};"
+             f"collective_s={r['t_collective']:.3e};bound={r['bound']};"
+             f"model_flops_ratio={r['useful_ratio']:.2f}")

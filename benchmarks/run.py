@@ -1,0 +1,41 @@
+"""Benchmark entry point — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table4 ...]
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from . import breakdown, convergence, flops_byte, kernels_bench, roofline_tables, scaling, throughput
+
+SECTIONS = {
+    "table1": flops_byte.run,       # Flops/Byte characterization
+    "table4": throughput.run,       # tokens/sec (+ v5e projection)
+    "fig8": convergence.run,        # LL vs iterations
+    "fig9": scaling.run,            # multi-device scaling
+    "table5": breakdown.run,        # time breakdown
+    "kernels": kernels_bench.run,   # Pallas kernel paths
+    "roofline": roofline_tables.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None,
+                    choices=sorted(SECTIONS))
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, fn in SECTIONS.items():
+        if args.only and name not in args.only:
+            continue
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001 — keep the harness running
+            print(f"{name}_ERROR,0,{type(e).__name__}: {e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Paper Table 4 / Fig 7: sampling throughput (#Tokens/sec, Eq. 2).
+
+Measured on CPU for the dense O(K) baseline vs the sparsity-aware S/Q
+sampler (the paper's algorithmic win, platform-independent), plus the
+TPU-v5e projected tokens/sec from the roofline bytes (LDA is memory bound,
+so tokens/sec ~ HBM_BW / bytes-per-token).
+"""
+import dataclasses
+import functools
+import time
+
+from .common import emit, timeit
+
+
+def run():
+    import jax
+    from repro.core import trainer
+    from repro.core.corpus import ell_capacity, tile_corpus
+    from repro.data.synthetic import zipf_corpus
+    from repro.launch.mesh import HBM_BW
+
+    # paper regime: K >> avg doc length (sparsity pays), T/V >~ 100 so the
+    # per-word p*/tree work amortizes over that word's tokens
+    corpus = zipf_corpus(num_docs=512, num_words=500, avg_doc_len=100, seed=0)
+    K = 1024
+    for which in ("dense", "sq"):
+        cfg = trainer.LDAConfig(num_topics=K, tile_tokens=64,
+                                tiles_per_step=8 if which == "dense" else 32,
+                                sampler=which,
+                                ell_capacity=ell_capacity(corpus, K))
+        shard = tile_corpus(corpus, 1, cfg.tile_tokens)[0]
+        key = jax.random.key(0)
+        state = trainer.init_state(cfg, shard, key)
+        step = jax.jit(functools.partial(trainer.lda_iteration, cfg, shard))
+        us = timeit(lambda: step(state, key)[0].z, warmup=1, iters=3)
+        tps = corpus.num_tokens / (us / 1e6)
+        emit(f"table4_cpu_{which}_K{K}", us,
+             f"tokens_per_sec={tps:.3g};T={corpus.num_tokens}")
+
+        # TPU projection: bytes/token from compiled HLO, memory-bound model
+        ca = step.lower(state, key).compile().cost_analysis()
+        bpt = float(ca.get("bytes accessed", 0) or 0) / corpus.num_tokens
+        proj = HBM_BW / max(bpt, 1e-9)
+        emit(f"table4_v5e_projected_{which}_K{K}", 0.0,
+             f"bytes_per_token={bpt:.0f};projected_tokens_per_sec={proj:.3g}")

@@ -1,0 +1,66 @@
+"""Serve a small LM: batched prefill + token-by-token decode with the ring
+KV cache (the decode_32k / long_500k code path, CPU scale).
+
+    PYTHONPATH=src python examples/serve_lm.py --requests 4 --gen 32
+"""
+import argparse
+import dataclasses
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--arch", default="gemma2-27b",
+                    help="assigned arch family to use (reduced config)")
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.archs import smoke
+    from repro.models import transformer as tf, zoo
+    from repro.models.common import NO_SHARDING
+
+    cfg = smoke(args.arch)
+    key = jax.random.key(0)
+    params = tf.init_params(key, cfg)
+    B = args.requests
+    print(f"serving {cfg.name}: {B} requests, prompt {args.prompt_len}, "
+          f"gen {args.gen}")
+
+    # prefill: run the full-sequence forward, then replay tokens through the
+    # decode path to populate the (ring) caches — same numerics either way
+    prompts = jax.random.randint(key, (B, args.prompt_len), 0, cfg.vocab_size)
+    dstate = zoo.init_decode_state(cfg, B,
+                                   max_len=args.prompt_len + args.gen)
+    dstep = jax.jit(zoo.make_decode_step(cfg, NO_SHARDING))
+
+    t0 = time.perf_counter()
+    logits = None
+    for i in range(args.prompt_len):
+        logits, dstate = dstep(params, dstate, prompts[:, i: i + 1])
+    t_prefill = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    out_tokens = []
+    tok = jnp.argmax(logits[:, :, : cfg.vocab_size], axis=-1).astype(jnp.int32)
+    for i in range(args.gen):
+        out_tokens.append(tok)
+        logits, dstate = dstep(params, dstate, tok)
+        tok = jnp.argmax(logits[:, :, : cfg.vocab_size], axis=-1).astype(jnp.int32)
+    tok.block_until_ready()
+    t_decode = time.perf_counter() - t0
+
+    gen = jnp.concatenate(out_tokens, axis=1)
+    print(f"prefill(replay): {B * args.prompt_len / t_prefill:7.0f} tok/s")
+    print(f"decode:          {B * args.gen / t_decode:7.0f} tok/s")
+    print("sample output ids:", gen[0, :12].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Config registry: --arch <id> resolves through ARCHS; LDA workload configs
+for the paper's own datasets live in lda_nytimes/lda_pubmed."""
+from .archs import ARCHS, SHAPES, LONG_OK, cells, skipped_cells, smoke  # noqa: F401

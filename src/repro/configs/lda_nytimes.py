@@ -1,0 +1,15 @@
+"""Paper workload: NYTimes (Table 3 — T=99.5M, D=300k, V=102k), K=1024.
+
+alpha=50/K, beta=0.01 per §2.1/§7.  ``scaled()`` returns a laptop-size
+synthetic corpus with the same shape statistics for the runnable examples.
+"""
+from repro.core.trainer import LDAConfig
+from repro.data import synthetic
+
+CONFIG = LDAConfig(num_topics=1024, beta=0.01, tile_tokens=256)
+FULL = dict(num_docs=299_752, num_words=101_636, num_tokens=99_542_125,
+            avg_doc_len=332)
+
+
+def scaled(scale: float = 0.001, seed: int = 0):
+    return synthetic.nytimes_like(scale, seed)

@@ -1,0 +1,11 @@
+"""Paper workload: PubMed (Table 3 — T=737.9M, D=8.2M, V=141k), K=1024."""
+from repro.core.trainer import LDAConfig
+from repro.data import synthetic
+
+CONFIG = LDAConfig(num_topics=1024, beta=0.01, tile_tokens=256)
+FULL = dict(num_docs=8_200_000, num_words=141_043, num_tokens=737_869_083,
+            avg_doc_len=92)
+
+
+def scaled(scale: float = 0.0001, seed: int = 0):
+    return synthetic.pubmed_like(scale, seed)

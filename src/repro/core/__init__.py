@@ -1,0 +1,7 @@
+"""CuLDA_CGS core: the paper's contribution in JAX.
+
+Sparsity-aware collapsed Gibbs sampling (S/Q decomposition, blocked
+two-level search), word-major tiling, delayed-count parallel semantics,
+and accelerator-side phi synchronization.
+"""
+from . import corpus, dense_sampler, likelihood, sampler, seq_ref, sync, trainer, updates  # noqa: F401

@@ -1,0 +1,92 @@
+"""Dense O(K) CGS sampler — the baseline CuLDA_CGS improves on (paper §2.1).
+
+Per token the full p(k) = (theta_dk + a) * p*(k) is materialized and sampled
+by prefix-sum + search.  Same delayed-count semantics, same tiling, same
+update path as the sparsity-aware sampler, so benchmark deltas isolate the
+algorithmic contribution (C4/C5/C7) exactly.
+
+Also used as the exact fallback for documents overflowing the ELL capacity in
+bucketed mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def sample_one_tile_dense(
+    phi_col: Array,      # (K,) int
+    phi_sum: Array,      # (K,) int
+    token_doc: Array,    # (t,) int32
+    token_mask: Array,   # (t,) bool
+    z_old: Array,        # (t,)
+    theta: Array,        # (D, K) int — dense doc-topic counts
+    uniforms: Array,     # (t,) float32
+    *,
+    alpha: float,
+    beta: float,
+    num_words_total: int,
+) -> Array:
+    pstar = (phi_col.astype(jnp.float32) + beta) / (
+        phi_sum.astype(jnp.float32) + beta * num_words_total
+    )
+    th = theta[token_doc].astype(jnp.float32)            # (t, K)
+    p = (th + alpha) * pstar[None, :]                    # (t, K)
+    cum = jnp.cumsum(p, axis=1)
+    target = uniforms * cum[:, -1]
+    k = jnp.minimum(jnp.sum(cum <= target[:, None], axis=1), p.shape[1] - 1)
+    z_new = k.astype(z_old.dtype)
+    return jnp.where(token_mask, z_new, z_old)
+
+
+def sample_sweep_dense(
+    phi_vk: Array,
+    phi_sum: Array,
+    tile_word: Array,
+    token_doc: Array,
+    token_mask: Array,
+    z: Array,
+    theta: Array,
+    key: Array,
+    *,
+    alpha: float,
+    beta: float,
+    num_words_total: int,
+    tiles_per_step: int = 8,
+) -> Array:
+    n, t = z.shape
+    n_pad = -n % tiles_per_step
+    if n_pad:  # pad with masked-out tiles (static at trace time)
+        tile_word = jnp.concatenate([tile_word, jnp.zeros(n_pad, tile_word.dtype)])
+        token_doc = jnp.concatenate([token_doc, jnp.zeros((n_pad, t), token_doc.dtype)])
+        token_mask = jnp.concatenate([token_mask, jnp.zeros((n_pad, t), bool)])
+        z = jnp.concatenate([z, jnp.zeros((n_pad, t), z.dtype)])
+    steps = (n + n_pad) // tiles_per_step
+
+    def chunk(carry, inp):
+        tw, td, tm, zc, keys = inp
+        unif = jax.vmap(lambda k: jax.random.uniform(k, (t,), jnp.float32))(keys)
+        phi_cols = phi_vk[tw]
+        z_new = jax.vmap(
+            functools.partial(
+                sample_one_tile_dense,
+                alpha=alpha, beta=beta, num_words_total=num_words_total,
+            ),
+            in_axes=(0, None, 0, 0, 0, None, 0),
+        )(phi_cols, phi_sum, td, tm, zc, theta, unif)
+        return carry, z_new
+
+    keys = jax.random.split(key, n + n_pad).reshape(steps, tiles_per_step)
+    xs = (
+        tile_word.reshape(steps, tiles_per_step),
+        token_doc.reshape(steps, tiles_per_step, t),
+        token_mask.reshape(steps, tiles_per_step, t),
+        z.reshape(steps, tiles_per_step, t),
+        keys,
+    )
+    _, z_chunks = jax.lax.scan(chunk, 0, xs)
+    return z_chunks.reshape(n + n_pad, t)[:n]

@@ -1,0 +1,62 @@
+"""Joint collapsed log-likelihood per token — the paper's Fig. 8 metric.
+
+log p(w, z | alpha, beta) =
+    sum_d [ lgamma(K a) - lgamma(L_d + K a) + sum_k (lgamma(theta_dk + a) - lgamma(a)) ]
+  + sum_k [ lgamma(V b) - lgamma(phi_sum_k + V b) ] + sum_kv (lgamma(phi_kv + b) - lgamma(b))
+
+Zero count entries contribute exactly 0 to the inner sums (lgamma(0+c)-lgamma(c)),
+so dense evaluation needs no masking; for a V-sharded phi the inner sum is a
+plain partial that psums linearly, while the outer (phi_sum) term is computed
+once from the global phi_sum.
+
+phi is word-major: (V, K).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax.scipy.special import gammaln
+
+Array = jnp.ndarray
+
+
+def doc_term(theta: Array, doc_length: Array, alpha: float) -> Array:
+    """Document side of the joint LL. theta: (D,K) counts; doc_length: (D,)."""
+    K = theta.shape[1]
+    f = jnp.float32
+    per_doc = (
+        gammaln(jnp.asarray(K * alpha, f))
+        - gammaln(doc_length.astype(f) + K * alpha)
+        + (gammaln(theta.astype(f) + alpha) - gammaln(jnp.asarray(alpha, f))).sum(-1)
+    )
+    # empty (padding) docs contribute 0
+    return jnp.where(doc_length > 0, per_doc, 0.0).sum()
+
+
+def word_inner_term(phi_vk: Array, beta: float) -> Array:
+    """sum_kv lgamma(phi_kv + b) - lgamma(b).  Linear in V-shards (psum-able)."""
+    f = jnp.float32
+    return (gammaln(phi_vk.astype(f) + beta) - gammaln(jnp.asarray(beta, f))).sum()
+
+
+def word_outer_term(phi_sum: Array, beta: float, num_words_total: int) -> Array:
+    """sum_k lgamma(V b) - lgamma(phi_sum_k + V b).  Uses the *global* V."""
+    f = jnp.float32
+    vb = num_words_total * beta
+    return (gammaln(jnp.asarray(vb, f)) - gammaln(phi_sum.astype(f) + vb)).sum()
+
+
+def joint_log_likelihood(
+    theta: Array,
+    doc_length: Array,
+    phi_vk: Array,
+    phi_sum: Array,
+    alpha: float,
+    beta: float,
+    num_words_total: int | None = None,
+) -> Array:
+    V = phi_vk.shape[0] if num_words_total is None else num_words_total
+    return (
+        doc_term(theta, doc_length, alpha)
+        + word_inner_term(phi_vk, beta)
+        + word_outer_term(phi_sum, beta, V)
+    )

@@ -1,0 +1,65 @@
+"""Model synchronization (paper §5.2) as mesh collectives.
+
+The paper hand-codes a log(G) tree reduce of the phi replicas followed by a
+broadcast, executed on the accelerators ("the CPU is slower than GPUs in
+terms of matrix adding").  On TPU that whole algorithm *is*
+``jax.lax.psum``: XLA emits the hierarchical ring/tree schedule over ICI
+(and DCN across pods), device-side, with no host round-trip.
+
+Partition modes (see DESIGN.md §3):
+  * 1D, paper-faithful: docs sharded over ("pod","data"); phi replicated ->
+    phi = psum(local counts) over *all* axes.
+  * 2D doc x word: docs over ("pod","data"), vocabulary over ("model",) ->
+    phi shard = psum over ("pod","data") only (1/m the volume), while theta
+    partials psum over ("model",).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+AxisNames = Sequence[str] | None
+
+
+def maybe_psum(x: Array, axes: AxisNames) -> Array:
+    if not axes:
+        return x
+    return jax.lax.psum(x, tuple(axes))
+
+
+def sync_phi(phi_local: Array, data_axes: AxisNames) -> Array:
+    """C3: reduce + broadcast of the per-shard phi counts."""
+    return maybe_psum(phi_local, data_axes)
+
+
+def sync_theta(theta_partial: Array, model_axes: AxisNames) -> Array:
+    """2D mode: a document's tokens are split across the word axis, so its
+    theta row is assembled by a psum over ("model",).  No-op in 1D."""
+    return maybe_psum(theta_partial, model_axes)
+
+
+def global_phi_sum(phi_vk: Array, model_axes: AxisNames) -> Array:
+    """Per-topic totals; phi columns live on V-shards in 2D mode."""
+    return maybe_psum(phi_vk.sum(axis=0), model_axes)
+
+
+def compressed_sync_phi(phi_delta: Array, data_axes: AxisNames) -> Array:
+    """C7 at the collective level (beyond-paper): sync per-iteration count
+    *deltas* in int16, halving the all-reduce bytes.
+
+    Exactness precondition: the **global** per-entry delta sum fits int16.
+    Addition mod 2^16 is associative, so the int16 ring-reduce returns the
+    true sum whenever that sum lies in [-2^15, 2^15): per (word, topic) the
+    per-iteration topic flux is bounded by the word's corpus frequency, so
+    this holds for every word with < 32768 occurrences.  Heavier words must
+    use the int32 path — ``trainer`` splits the vocabulary accordingly
+    (heavy rows int32, the long tail int16).
+    """
+    if not data_axes:
+        return phi_delta
+    s16 = jax.lax.psum(phi_delta.astype(jnp.int16), tuple(data_axes))
+    return s16.astype(jnp.int32)

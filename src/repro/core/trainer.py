@@ -1,0 +1,269 @@
+"""LDA training loop — WorkSchedule1/2 (paper §5.1) on JAX meshes.
+
+State layout:
+  z        (n_tiles, tile_tokens) int16 — topic assignments (C7 compression);
+           the *only* mutable model state: theta and phi are derived counts,
+           rebuilt exactly from z (this is also what makes checkpoints tiny
+           and elastic — see repro.distributed.checkpoint).
+  phi_vk   (V_local, K) int32 — topic-word counts, word-major.
+  phi_sum  (K,) int32 — global per-topic totals.
+
+Per iteration (delayed-count semantics, exactly the paper's):
+  1. theta/ELL rebuilt from z (psum over "model" in 2D mode);
+  2. every token resampled against the frozen iteration-start phi
+     (WorkSchedule1: one sweep; WorkSchedule2: M micro-chunks scanned with
+     theta refreshed in between — fresher counts, the streaming analogue of
+     the paper's chunk pipeline);
+  3. phi rebuilt from the new z; replicas reduced+broadcast (psum, C3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import dense_sampler, likelihood, sampler, sync, updates
+from .corpus import Corpus, TiledCorpusShard, ell_capacity, tile_corpus
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class LDAConfig:
+    num_topics: int = 1024
+    alpha: float | None = None       # default 50/K (paper §2.1)
+    beta: float = 0.01
+    tile_tokens: int = 256           # tokens per word tile (C6)
+    tiles_per_step: int = 64         # vmap width inside the sweep scan
+    ell_capacity: int | None = None  # P; None = exact bound from corpus
+    micro_chunks: int = 1            # M: 1 = WorkSchedule1, >1 = WorkSchedule2
+    sampler: str = "sq"              # "sq" (paper) | "dense" (O(K) baseline)
+    topic_dtype: Any = jnp.int16     # C7
+    compressed_sync: bool = False    # int16 delta all-reduce (see sync.py)
+    seed: int = 0
+
+    def resolved_alpha(self) -> float:
+        return 50.0 / self.num_topics if self.alpha is None else self.alpha
+
+
+class LDAState(NamedTuple):
+    z: Array          # (n, t) topic assignments
+    phi_vk: Array     # (V_local, K)
+    phi_sum: Array    # (K,)
+    iteration: Array  # ()
+
+
+class IterStats(NamedTuple):
+    sparse_frac: Array
+    ell_overflow: Array  # docs exceeding ELL capacity (0 in exact mode)
+
+
+def state_from_z(
+    cfg: LDAConfig,
+    shard: TiledCorpusShard,
+    z: Array,
+    iteration,
+    data_axes=None,
+    model_axes=None,
+) -> LDAState:
+    """Rebuild the derived counts from assignments (init, restore, elastic)."""
+    phi_local = updates.phi_from_z(z, shard.tile_word, shard.token_mask,
+                                   shard.num_words, cfg.num_topics)
+    phi = sync.sync_phi(phi_local, data_axes)
+    phi_sum = sync.global_phi_sum(phi, model_axes)
+    return LDAState(z=z, phi_vk=phi, phi_sum=phi_sum,
+                    iteration=jnp.asarray(iteration, jnp.int32))
+
+
+def init_state(
+    cfg: LDAConfig,
+    shard: TiledCorpusShard,
+    key: Array,
+    data_axes=None,
+    model_axes=None,
+) -> LDAState:
+    K = cfg.num_topics
+    n, t = shard.token_doc.shape
+    z0 = jax.random.randint(key, (n, t), 0, K, jnp.int32).astype(cfg.topic_dtype)
+    return state_from_z(cfg, shard, z0, 0, data_axes, model_axes)
+
+
+def _build_theta_ell(cfg: LDAConfig, shard: TiledCorpusShard, z, model_axes):
+    K = cfg.num_topics
+    theta = updates.theta_from_z(z, shard.token_doc, shard.token_mask,
+                                 shard.num_docs_local, K)
+    theta = sync.sync_theta(theta, model_axes)
+    P = cfg.ell_capacity or min(K, int(shard.doc_length.max()) if shard.doc_length.size else K)
+    counts, topics, overflow = updates.theta_to_ell(theta, min(P, K))
+    return theta, counts, topics, overflow
+
+
+def lda_iteration(
+    cfg: LDAConfig,
+    shard: TiledCorpusShard,
+    state: LDAState,
+    base_key: Array,
+    data_axes=None,
+    model_axes=None,
+) -> tuple[LDAState, IterStats]:
+    """One full sweep over this shard's tokens + phi sync."""
+    K = cfg.num_topics
+    alpha, beta = cfg.resolved_alpha(), cfg.beta
+    key = jax.random.fold_in(base_key, state.iteration)
+    for ax in (tuple(data_axes or ()) + tuple(model_axes or ())):
+        key = jax.random.fold_in(key, jax.lax.axis_index(ax))
+
+    theta, ell_c, ell_t, overflow = _build_theta_ell(cfg, shard, state.z, model_axes)
+
+    n, t = state.z.shape
+    M = cfg.micro_chunks
+    v_total = shard.num_words_total or shard.num_words
+    sweep_kwargs = dict(alpha=alpha, beta=beta, num_words_total=v_total)
+
+    if M == 1:  # WorkSchedule1: whole shard resident, one sweep
+        if cfg.sampler == "sq":
+            z_new, stats = sampler.sample_sweep(
+                state.phi_vk, state.phi_sum, shard.tile_word, shard.token_doc,
+                shard.token_mask, state.z, ell_c, ell_t, key,
+                tiles_per_step=min(cfg.tiles_per_step, n), **sweep_kwargs)
+            sparse_frac = stats.sparse_frac
+        else:
+            z_new = dense_sampler.sample_sweep_dense(
+                state.phi_vk, state.phi_sum, shard.tile_word, shard.token_doc,
+                shard.token_mask, state.z, theta, key,
+                tiles_per_step=min(cfg.tiles_per_step, n), **sweep_kwargs)
+            sparse_frac = jnp.float32(0)
+    else:  # WorkSchedule2: M micro-chunks, theta refreshed between chunks
+        n_pad = -n % M
+        tw_a, td_a, tm_a, z_a = shard.tile_word, shard.token_doc, shard.token_mask, state.z
+        if n_pad:  # masked-out padding tiles (static at trace time)
+            tw_a = jnp.concatenate([tw_a, jnp.zeros(n_pad, tw_a.dtype)])
+            td_a = jnp.concatenate([td_a, jnp.zeros((n_pad, t), td_a.dtype)])
+            tm_a = jnp.concatenate([tm_a, jnp.zeros((n_pad, t), bool)])
+            z_a = jnp.concatenate([z_a, jnp.zeros((n_pad, t), z_a.dtype)])
+        nc = (n + n_pad) // M
+        P = ell_c.shape[1]
+
+        def chunk_step(theta_c, inp):
+            tw, td, tm, zc, kc = inp
+            cnts, tpcs = jax.lax.top_k(theta_c, P)
+            if cfg.sampler == "sq":
+                z_c, st = sampler.sample_sweep(
+                    state.phi_vk, state.phi_sum, tw, td, tm, zc, cnts, tpcs,
+                    kc, tiles_per_step=min(cfg.tiles_per_step, nc), **sweep_kwargs)
+                sf = st.sparse_frac
+            else:
+                z_c = dense_sampler.sample_sweep_dense(
+                    state.phi_vk, state.phi_sum, tw, td, tm, zc, theta_c, kc,
+                    tiles_per_step=min(cfg.tiles_per_step, nc), **sweep_kwargs)
+                sf = jnp.float32(0)
+            delta = updates.theta_delta(zc, z_c, td, tm,
+                                        theta_c.shape[0], K)
+            theta_n = theta_c + sync.sync_theta(delta, model_axes)
+            return theta_n, (z_c, sf)
+
+        xs = (
+            tw_a.reshape(M, nc),
+            td_a.reshape(M, nc, t),
+            tm_a.reshape(M, nc, t),
+            z_a.reshape(M, nc, t),
+            jax.random.split(key, M),
+        )
+        _, (z_chunks, sfs) = jax.lax.scan(chunk_step, theta, xs)
+        z_new = z_chunks.reshape(n + n_pad, t)[:n]
+        sparse_frac = sfs.mean()
+
+    # phi rebuild + reduce/broadcast (C3)
+    if cfg.compressed_sync and data_axes:
+        # beyond-paper: all-reduce the int16 per-iteration DELTA instead of
+        # rebuilt int32 counts — half the bytes (C7 applied to the wire).
+        # Exact while the global per-entry flux fits int16 (see sync.py).
+        d_new = updates.phi_from_z(z_new, shard.tile_word, shard.token_mask,
+                                   shard.num_words, K)
+        d_old = updates.phi_from_z(state.z, shard.tile_word, shard.token_mask,
+                                   shard.num_words, K)
+        phi = state.phi_vk + sync.compressed_sync_phi(d_new - d_old, data_axes)
+    else:
+        phi_local = updates.phi_from_z(z_new, shard.tile_word,
+                                       shard.token_mask, shard.num_words, K)
+        phi = sync.sync_phi(phi_local, data_axes)
+    phi_sum = sync.global_phi_sum(phi, model_axes)
+    new_state = LDAState(z=z_new, phi_vk=phi, phi_sum=phi_sum,
+                         iteration=state.iteration + 1)
+    return new_state, IterStats(sparse_frac=sparse_frac,
+                                ell_overflow=overflow.sum())
+
+
+def log_likelihood(
+    cfg: LDAConfig, shard: TiledCorpusShard, state: LDAState,
+    data_axes=None, model_axes=None,
+) -> Array:
+    """Joint collapsed LL (Fig. 8 metric).  In SPMD contexts: doc term psums
+    over the doc shards; word term is computed from the phi this device holds
+    (full replica in 1D; V-shard psum'd over model in 2D)."""
+    alpha, beta = cfg.resolved_alpha(), cfg.beta
+    theta = updates.theta_from_z(state.z, shard.token_doc, shard.token_mask,
+                                 shard.num_docs_local, cfg.num_topics)
+    theta = sync.sync_theta(theta, model_axes)
+    dterm = likelihood.doc_term(theta, shard.doc_length, alpha)
+    dterm = sync.maybe_psum(dterm, data_axes)
+    winner = likelihood.word_inner_term(state.phi_vk, beta)
+    winner = sync.maybe_psum(winner, model_axes)
+    wouter = likelihood.word_outer_term(state.phi_sum, beta,
+                                        shard.num_words_total or shard.num_words)
+    return dterm + winner + wouter
+
+
+# ---------------------------------------------------------------------------
+# Single-host convenience driver (examples + tests); the pod-scale launcher
+# lives in repro.launch.train.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TrainResult:
+    state: LDAState
+    ll_per_token: list[float]
+    tokens_per_sec: list[float]
+    stats: list[tuple[float, float]]
+
+
+def train(
+    corpus: Corpus,
+    cfg: LDAConfig,
+    num_iterations: int,
+    eval_every: int = 1,
+    shard: TiledCorpusShard | None = None,
+    callback: Callable[[int, LDAState, float], None] | None = None,
+) -> TrainResult:
+    """Single-device end-to-end driver."""
+    if shard is None:
+        shard = tile_corpus(corpus, 1, cfg.tile_tokens)[0]
+    if cfg.ell_capacity is None:
+        cfg = dataclasses.replace(cfg, ell_capacity=ell_capacity(corpus, cfg.num_topics))
+    key = jax.random.key(cfg.seed)
+    state = init_state(cfg, shard, key)
+
+    step = jax.jit(functools.partial(lda_iteration, cfg, shard))
+    ll_fn = jax.jit(functools.partial(log_likelihood, cfg, shard))
+
+    lls: list[float] = []
+    tps: list[float] = []
+    st: list[tuple[float, float]] = []
+    for it in range(num_iterations):
+        t0 = time.perf_counter()
+        state, stats = step(state, key)
+        state.z.block_until_ready()
+        dt = time.perf_counter() - t0
+        tps.append(shard.num_tokens / dt)
+        st.append((float(stats.sparse_frac), float(stats.ell_overflow)))
+        if (it + 1) % eval_every == 0 or it == num_iterations - 1:
+            ll = float(ll_fn(state)) / corpus.num_tokens
+            lls.append(ll)
+            if callback:
+                callback(it, state, ll)
+    return TrainResult(state=state, ll_per_token=lls, tokens_per_sec=tps, stats=st)

@@ -1,0 +1,84 @@
+"""Count-matrix updates (paper §6.2), TPU-idiomatic.
+
+The paper updates phi with locality-friendly atomics (word-by-word, tokens
+word-sorted) and theta via a dense scratch row + prefix-sum re-sparsify.  On
+TPU there are no atomics; both become sorted scatter-adds / one-hot matmuls:
+
+* ``phi_from_z``    — rebuild the local phi replica from assignments.  The
+  word-major tile layout makes the scatter indices sorted by row, which XLA
+  turns into an efficient segmented update (and the Pallas kernel variant in
+  ``repro.kernels.phi_update`` does it as one-hot MXU matmuls).
+* ``theta_from_z``  — dense (D_local, K) scatter-add (the paper's dense
+  scratch, batched over all local docs).
+* ``theta_to_ell``  — dense -> ELL (padded sparse) via top_k; the TPU
+  replacement for the paper's CSR re-pack (prefix-sum compaction).
+
+phi is stored **word-major**: shape (V, K) so one word's topic row is
+contiguous — the same reason the paper sorts tokens word-first.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def phi_from_z(
+    z: Array, tile_word: Array, token_mask: Array, num_words: int, num_topics: int
+) -> Array:
+    """(V, K) topic-word counts from tiled assignments.
+
+    z: (n, t) topic per token; tile_word: (n,); token_mask: (n, t).
+    """
+    n, t = z.shape
+    words = jnp.broadcast_to(tile_word[:, None], (n, t)).reshape(-1)
+    topics = z.reshape(-1).astype(jnp.int32)
+    inc = token_mask.reshape(-1).astype(jnp.int32)
+    phi = jnp.zeros((num_words, num_topics), jnp.int32)
+    return phi.at[words, topics].add(inc)
+
+
+def theta_from_z(
+    z: Array, token_doc: Array, token_mask: Array, num_docs: int, num_topics: int
+) -> Array:
+    """(D_local, K) doc-topic counts from tiled assignments."""
+    docs = token_doc.reshape(-1)
+    topics = z.reshape(-1).astype(jnp.int32)
+    inc = token_mask.reshape(-1).astype(jnp.int32)
+    theta = jnp.zeros((num_docs, num_topics), jnp.int32)
+    return theta.at[docs, topics].add(inc)
+
+
+def theta_delta(
+    z_old: Array, z_new: Array, token_doc: Array, token_mask: Array,
+    num_docs: int, num_topics: int,
+) -> Array:
+    """Incremental theta update for micro-chunk refresh (WorkSchedule2)."""
+    docs = token_doc.reshape(-1)
+    inc = token_mask.reshape(-1).astype(jnp.int32)
+    d = jnp.zeros((num_docs, num_topics), jnp.int32)
+    d = d.at[docs, z_new.reshape(-1).astype(jnp.int32)].add(inc)
+    d = d.at[docs, z_old.reshape(-1).astype(jnp.int32)].add(-inc)
+    return d
+
+
+def theta_to_ell(theta: Array, capacity: int) -> tuple[Array, Array, Array]:
+    """Dense theta -> ELL: (counts (D,P) int32, topics (D,P) int32, overflowed (D,) bool).
+
+    Rows with more than ``capacity`` non-zeros are flagged; callers either
+    guarantee capacity >= max K_d (exact mode) or route flagged docs to the
+    dense sampler (bucketed mode).  Padding entries have count 0 and thus
+    contribute 0 to p1.
+    """
+    counts, topics = jax.lax.top_k(theta, capacity)
+    nnz = (theta > 0).sum(axis=-1)
+    return counts, topics, nnz > capacity
+
+
+def phi_totals(phi_vk: Array) -> Array:
+    """phi_sum (K,) — per-topic token totals (the Eq. 1 denominator).
+
+    For a V-sharded phi this is the *local* partial; callers psum it.
+    """
+    return phi_vk.sum(axis=0)

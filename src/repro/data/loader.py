@@ -1,0 +1,77 @@
+"""Host data pipeline: sharded batching with background prefetch.
+
+The device never waits on the host: batches are produced by a worker thread
+into a small queue and transferred while the previous step computes (the
+WorkSchedule2 overlap idea — C2 — applied to input data).  Used by the LM
+training path; the LDA corpus is static (resident, WorkSchedule1) so it
+needs no loader.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator
+
+import jax
+import numpy as np
+
+
+class PrefetchLoader:
+    """Wraps a host-side batch generator with N-deep device prefetch."""
+
+    def __init__(self, make_batch: Callable[[int], dict], depth: int = 2,
+                 sharding=None):
+        self._make = make_batch
+        self._depth = depth
+        self._sharding = sharding
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._step = 0
+        self._thread.start()
+
+    def _worker(self):
+        i = 0
+        while not self._stop.is_set():
+            batch = self._make(i)
+            if self._sharding is not None:
+                batch = jax.device_put(batch, self._sharding)
+            else:
+                batch = jax.device_put(batch)
+            try:
+                self._q.put(batch, timeout=1.0)
+                i += 1
+            except queue.Full:
+                continue
+
+    def __iter__(self) -> Iterator[dict]:
+        return self
+
+    def __next__(self) -> dict:
+        return self._q.get()
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+
+
+def lm_batches(vocab: int, batch: int, seq: int, seed: int = 0,
+               table_size: int = 4096):
+    """Deterministic synthetic LM stream (Zipf-initialised bigram table —
+    learnable structure so loss curves mean something)."""
+    rng = np.random.default_rng(seed)
+    table = rng.integers(0, vocab, size=(table_size,))
+
+    def make(i: int) -> dict:
+        r = np.random.default_rng(seed * 1_000_003 + i)
+        toks = [r.integers(0, vocab, size=(batch, 1))]
+        for _ in range(seq):
+            toks.append(table[toks[-1] % table_size])
+        seq_arr = np.concatenate(toks, axis=1).astype(np.int32)
+        return {"tokens": seq_arr[:, :-1], "labels": seq_arr[:, 1:]}
+
+    return make

@@ -1,0 +1,147 @@
+"""Fault tolerance: tiny, atomic, elastic checkpoints.
+
+The whole mutable model state of CGS-LDA is the assignment vector z — theta
+and phi are *derived counts*, rebuilt exactly from z.  A checkpoint is
+therefore:
+
+    z_canonical  (T,) int16   topic per token, in canonical corpus order
+    meta         json         iteration, config, corpus fingerprint, mesh
+
+Properties this buys at pod scale:
+  * tiny      — 2 bytes/token (PubMed: 1.5 GB for 738M tokens vs ~6 GB for
+                the count matrices), C7's compression applied to state;
+  * atomic    — write to <name>.tmp, fsync, rename; a crash mid-save leaves
+                the previous checkpoint intact;
+  * async     — the device->host gather is synchronous (cheap), the file
+                write happens on a background thread so sampling continues;
+  * elastic   — restore re-partitions z onto ANY mesh shape/partition mode:
+                counts are rebuilt per shard, so scaling from 256 to 512
+                devices (or 1D -> 2D) is exact, not approximate.
+
+Failure model: on a real pod a node failure kills the SPMD program; the
+launcher restarts survivors + replacements, which call ``latest()`` and
+resume from the last complete iteration.  Straggler mitigation is static
+(C1 token balancing); slow hosts shift the whole step (SPMD), so the
+launcher's job is replacement, not rebalancing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import tempfile
+import threading
+import time
+from typing import Any
+
+import numpy as np
+import jax
+
+from repro.core.corpus import Corpus
+
+_FORMAT_VERSION = 1
+
+
+def corpus_fingerprint(corpus: Corpus) -> str:
+    h = hashlib.sha256()
+    h.update(np.asarray([corpus.num_docs, corpus.num_words,
+                         corpus.num_tokens]).tobytes())
+    h.update(corpus.word_ids[:4096].tobytes())
+    h.update(corpus.word_ids[-4096:].tobytes())
+    return h.hexdigest()[:16]
+
+
+def gather_canonical_z(state_z, token_uid, num_tokens: int) -> np.ndarray:
+    """(G, n, t) or (n, t) tiled z + uids -> (T,) canonical int16."""
+    z = np.asarray(jax.device_get(state_z)).reshape(-1)
+    uid = np.asarray(jax.device_get(token_uid)).reshape(-1)
+    valid = uid >= 0
+    out = np.zeros(num_tokens, dtype=np.int16)
+    out[uid[valid]] = z[valid].astype(np.int16)
+    return out
+
+
+def scatter_canonical_z(z_canon: np.ndarray, token_uid) -> np.ndarray:
+    """(T,) canonical z -> tiled z matching ``token_uid``'s layout."""
+    uid = np.asarray(token_uid)
+    flat = uid.reshape(-1)
+    z = np.zeros(flat.shape, dtype=np.int16)
+    valid = flat >= 0
+    z[valid] = z_canon[flat[valid]]
+    return z.reshape(uid.shape)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_write: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_write = async_write
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    # -- save ---------------------------------------------------------------
+    def save(self, iteration: int, z_canon: np.ndarray, meta: dict[str, Any]):
+        self.wait()  # one outstanding write at a time
+        meta = dict(meta, iteration=int(iteration), version=_FORMAT_VERSION,
+                    wall_time=time.time())
+
+        def _write():
+            name = f"ckpt_{iteration:08d}"
+            fd, tmp = tempfile.mkstemp(dir=self.dir, suffix=".tmp")
+            try:
+                with os.fdopen(fd, "wb") as f:
+                    np.savez_compressed(f, z=z_canon)
+                    f.flush()
+                    os.fsync(f.fileno())
+                os.replace(tmp, os.path.join(self.dir, name + ".npz"))
+            finally:
+                if os.path.exists(tmp):
+                    os.unlink(tmp)
+            mtmp = os.path.join(self.dir, name + ".json.tmp")
+            with open(mtmp, "w") as f:
+                json.dump(meta, f)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(mtmp, os.path.join(self.dir, name + ".json"))
+            self._gc()
+
+        if self.async_write:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+        else:
+            _write()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.list_steps()
+        for s in steps[: -self.keep]:
+            for ext in (".npz", ".json"):
+                p = os.path.join(self.dir, f"ckpt_{s:08d}{ext}")
+                if os.path.exists(p):
+                    os.unlink(p)
+
+    # -- restore --------------------------------------------------------------
+    def list_steps(self) -> list[int]:
+        steps = []
+        for fn in os.listdir(self.dir):
+            if fn.startswith("ckpt_") and fn.endswith(".json"):
+                steps.append(int(fn[5:13]))
+        return sorted(steps)
+
+    def latest(self) -> tuple[int, np.ndarray, dict] | None:
+        """Newest checkpoint whose npz+json pair is complete."""
+        for s in reversed(self.list_steps()):
+            npz = os.path.join(self.dir, f"ckpt_{s:08d}.npz")
+            js = os.path.join(self.dir, f"ckpt_{s:08d}.json")
+            if os.path.exists(npz) and os.path.exists(js):
+                with np.load(npz) as d:
+                    z = d["z"]
+                with open(js) as f:
+                    meta = json.load(f)
+                return s, z, meta
+        return None

@@ -1,0 +1,296 @@
+"""Multi-device LDA partitions on JAX meshes (paper §4-§5 + DESIGN.md §3).
+
+Two partition modes:
+
+* ``"1d"`` — paper-faithful partition-by-document: the corpus is split into
+  one chunk per device over *all* the given doc axes (balanced by token
+  count, C1); phi is fully replicated and reduce+broadcast (psum, C3) every
+  iteration.  Matches CuLDA_CGS exactly; the phi all-reduce volume is
+  K*V*4B per device per iteration.
+
+* ``"2d"`` — beyond-paper doc x word hybrid: documents over ``doc_axes``,
+  vocabulary over ``word_axes``.  Each device samples the tokens of
+  (its docs) ∩ (its words) against its local phi rows; theta partials psum
+  over the word axes, phi shards psum over the doc axes only — 1/|word axes|
+  of the 1D collective volume.  The sampler itself is partition-agnostic
+  (tiles carry local word ids).
+
+Host-side construction is numpy; device arrays are stacked with a leading
+shard axis and handed to ``jax.shard_map``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import trainer as core_trainer
+from repro.core.corpus import (
+    Corpus, TiledCorpusShard, ell_capacity, partition_by_document, tile_shard,
+)
+
+Array = jnp.ndarray
+
+# array leaves that travel through shard_map (leading shard axis)
+_CORPUS_FIELDS = ("tile_word", "token_doc", "token_mask", "tile_first",
+                  "doc_length", "doc_global", "token_uid")
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionPlan:
+    """Static description of how the corpus was laid onto the mesh."""
+
+    mode: str                       # "1d" | "2d"
+    doc_axes: tuple[str, ...]       # mesh axes carrying document shards
+    word_axes: tuple[str, ...]      # mesh axes carrying vocabulary shards
+    num_doc_shards: int
+    num_word_shards: int
+    word_shard_of: np.ndarray | None = None   # (V,) -> word shard (2d)
+    word_local_id: np.ndarray | None = None   # (V,) -> local row (2d)
+    vocab_shard_size: int = 0                 # padded local V (2d)
+
+
+def partition_vocabulary(corpus: Corpus, num_shards: int):
+    """LPT-balance words over word shards by token count (the paper's C1
+    balance rule applied on the vocabulary axis)."""
+    counts = np.bincount(corpus.word_ids, minlength=corpus.num_words)
+    order = np.argsort(-counts, kind="stable")
+    shard_of = np.empty(corpus.num_words, dtype=np.int32)
+    local_id = np.empty(corpus.num_words, dtype=np.int32)
+    loads = np.zeros(num_shards, dtype=np.int64)
+    fill = np.zeros(num_shards, dtype=np.int64)
+    for v in order:
+        s = int(np.argmin(loads))
+        shard_of[v] = s
+        local_id[v] = fill[s]
+        fill[s] += 1
+        loads[s] += int(counts[v])
+    return shard_of, local_id, int(fill.max())
+
+
+def _subset(corpus: Corpus, sel: np.ndarray, word_map: np.ndarray | None,
+            num_words_local: int) -> tuple[Corpus, np.ndarray]:
+    """Restricted corpus + the canonical indices of the selected tokens."""
+    w = corpus.word_ids[sel]
+    if word_map is not None:
+        w = word_map[w]
+    sub = Corpus(corpus.doc_ids[sel].copy(), w.astype(np.int32),
+                 corpus.num_docs, num_words_local)
+    return sub, np.nonzero(sel)[0].astype(np.int32)
+
+
+def build_shards(
+    corpus: Corpus,
+    num_doc_shards: int,
+    num_word_shards: int,
+    mode: str,
+    tile_tokens: int,
+) -> tuple[list[TiledCorpusShard], PartitionPlan, list[np.ndarray]]:
+    """Host-side shard construction (doc-major, then word order)."""
+    doc_parts = partition_by_document(corpus, num_doc_shards)
+    lengths = corpus.doc_lengths()
+
+    if mode == "1d":
+        assert num_word_shards == 1
+        subs = [(*_subset(corpus, np.isin(corpus.doc_ids, pd), None, corpus.num_words), pd)
+                for pd in doc_parts]
+        word_meta = (None, None, 0)
+    else:
+        shard_of, local_id, v_local = partition_vocabulary(corpus, num_word_shards)
+        subs = []
+        for pd in doc_parts:
+            doc_sel = np.isin(corpus.doc_ids, pd)
+            for m in range(num_word_shards):
+                sel = doc_sel & (shard_of[corpus.word_ids] == m)
+                subs.append((*_subset(corpus, sel, local_id, v_local), pd))
+        word_meta = (shard_of, local_id, v_local)
+
+    v_total = corpus.num_words
+    pre = [tile_shard(sub, pd, tile_tokens, token_uid=uid,
+                      num_words_total=v_total)
+           for sub, uid, pd in subs]
+    n_max = max(s.tile_word.shape[0] for s in pre)
+    shards = [tile_shard(sub, pd, tile_tokens, n_max, token_uid=uid,
+                         num_words_total=v_total)
+              for sub, uid, pd in subs]
+    full_doc_lengths = [lengths[pd] for sub, uid, pd in subs]
+    plan = PartitionPlan(mode, (), (), num_doc_shards, num_word_shards,
+                         *word_meta)
+    return shards, plan, full_doc_lengths
+
+
+def stack_shards(shards: list[TiledCorpusShard],
+                 full_doc_lengths: list[np.ndarray]) -> dict:
+    """Stack per-device shards on a leading shard axis -> dict of (G, ...) arrays.
+
+    ``doc_length`` is the *global* per-doc length (in 2D the local bincount
+    only sees one word shard's tokens)."""
+    d_max = max(s.num_docs_local for s in shards)
+
+    def pad_docs(x, fill=0):
+        x = np.asarray(x)
+        out = np.full((d_max,), fill, dtype=x.dtype)
+        out[: len(x)] = x
+        return out
+
+    return dict(
+        tile_word=jnp.stack([s.tile_word for s in shards]),
+        token_doc=jnp.stack([s.token_doc for s in shards]),
+        token_mask=jnp.stack([s.token_mask for s in shards]),
+        tile_first=jnp.stack([s.tile_first for s in shards]),
+        doc_length=jnp.stack([jnp.asarray(pad_docs(x)) for x in full_doc_lengths]),
+        doc_global=jnp.stack([jnp.asarray(pad_docs(s.doc_global, -1)) for s in shards]),
+        token_uid=jnp.stack([s.token_uid for s in shards]),
+    )
+
+
+class DistributedLDA:
+    """Mesh-wide LDA: shard_map-wrapped iteration + likelihood.
+
+    1D (paper): ``doc_axes`` = every mesh axis, ``word_axes=()``.
+    2D (ours):  ``doc_axes`` = e.g. ("pod","data"), ``word_axes=("model",)``.
+    """
+
+    def __init__(self, cfg: core_trainer.LDAConfig, mesh: Mesh, corpus: Corpus,
+                 mode: str = "1d",
+                 doc_axes: Sequence[str] | None = None,
+                 word_axes: Sequence[str] = ("model",)):
+        if cfg.ell_capacity is None:
+            cfg = dataclasses.replace(
+                cfg, ell_capacity=ell_capacity(corpus, cfg.num_topics))
+        self.cfg = cfg
+        self.mesh = mesh
+        self.corpus = corpus
+        axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        if doc_axes is None:
+            doc_axes = tuple(a for a in mesh.axis_names
+                             if mode == "1d" or a not in word_axes)
+        doc_axes = tuple(doc_axes)
+        word_axes = tuple(word_axes) if mode == "2d" else ()
+        n_doc = int(np.prod([axis_sizes[a] for a in doc_axes]))
+        n_word = int(np.prod([axis_sizes[a] for a in word_axes])) if word_axes else 1
+
+        shards, plan, full_dl = build_shards(corpus, n_doc, n_word, mode,
+                                             cfg.tile_tokens)
+        self.plan = dataclasses.replace(plan, doc_axes=doc_axes, word_axes=word_axes)
+        self.stacked = stack_shards(shards, full_dl)
+        self.num_tokens = corpus.num_tokens
+        self._template = shards[0]  # static aux: num_words, num_docs_local
+
+        lead = doc_axes + word_axes     # shard-axis order is doc-major
+        dev = P(lead)
+        repl = P()
+        corpus_specs = {k: dev for k in _CORPUS_FIELDS}
+        state_specs = core_trainer.LDAState(
+            z=dev,
+            phi_vk=(repl if mode == "1d" else P(word_axes)),
+            phi_sum=repl,
+            iteration=repl,
+        )
+        stats_specs = core_trainer.IterStats(sparse_frac=repl, ell_overflow=repl)
+
+        d_ax = doc_axes if mode == "2d" else lead
+        m_ax = word_axes if mode == "2d" else None
+        all_ax = lead
+        cfg_ = self.cfg
+        template = self._template
+
+        def unpack(c: dict) -> TiledCorpusShard:
+            return TiledCorpusShard(
+                tile_word=c["tile_word"][0], token_doc=c["token_doc"][0],
+                token_mask=c["token_mask"][0], tile_first=c["tile_first"][0],
+                doc_length=c["doc_length"][0], doc_global=c["doc_global"][0],
+                token_uid=c["token_uid"][0],
+                num_tokens=template.num_tokens, num_words=template.num_words,
+                num_docs_local=c["doc_length"].shape[1],
+                num_words_total=template.num_words_total,
+            )
+
+        def fold_axes(key):
+            for ax in all_ax:
+                key = jax.random.fold_in(key, jax.lax.axis_index(ax))
+            return key
+
+        def _init(c, key):
+            return core_trainer.init_state(cfg_, unpack(c), fold_axes(key),
+                                           data_axes=d_ax, model_axes=m_ax)
+
+        def _rebuild(c, z, iteration):
+            return core_trainer.state_from_z(cfg_, unpack(c), z, iteration,
+                                             data_axes=d_ax, model_axes=m_ax)
+
+        def _step(c, state, key):
+            st, stats = core_trainer.lda_iteration(
+                cfg_, unpack(c), state, key, data_axes=d_ax, model_axes=m_ax)
+            stats = core_trainer.IterStats(
+                sparse_frac=jax.lax.pmean(stats.sparse_frac, all_ax),
+                ell_overflow=jax.lax.psum(stats.ell_overflow, all_ax)
+                // (n_word if mode == "2d" else 1),
+            )
+            return st, stats
+
+        def _ll(c, state):
+            return core_trainer.log_likelihood(
+                cfg_, unpack(c), state,
+                data_axes=(d_ax if mode == "1d" else
+                           d_ax),  # theta term: psum over doc shards only
+                model_axes=m_ax)
+
+        sm = lambda f, ins, outs: jax.jit(jax.shard_map(
+            f, mesh=mesh, in_specs=ins, out_specs=outs, check_vma=False))
+        self._init_fn = sm(_init, (corpus_specs, repl), state_specs)
+        self._rebuild_fn = sm(_rebuild, (corpus_specs, dev, repl), state_specs)
+        self._step_fn = sm(_step, (corpus_specs, state_specs, repl),
+                           (state_specs, stats_specs))
+        self._ll_fn = sm(_ll, (corpus_specs, state_specs), repl)
+        self.state_specs = state_specs
+        self.corpus_specs = corpus_specs
+        self._mode = mode
+
+    # -- public API ---------------------------------------------------------
+    def init(self, seed: int | None = None):
+        key = jax.random.key(self.cfg.seed if seed is None else seed)
+        with self.mesh:
+            return self._init_fn(self.stacked, key)
+
+    def step(self, state):
+        key = jax.random.key(self.cfg.seed + 1)
+        with self.mesh:
+            return self._step_fn(self.stacked, state, key)
+
+    def log_likelihood(self, state) -> float:
+        with self.mesh:
+            return float(self._ll_fn(self.stacked, state)) / self.num_tokens
+
+    def restore(self, z_canon: np.ndarray, iteration: int):
+        """Elastic restore: canonical z -> state on THIS mesh/partition.
+
+        Works across any device count / partition mode change because counts
+        are rebuilt from the re-tiled assignments."""
+        from repro.distributed import checkpoint as ckpt
+        z_tiled = ckpt.scatter_canonical_z(z_canon, self.stacked["token_uid"])
+        z_dev = jnp.asarray(z_tiled.reshape(-1, z_tiled.shape[-1])
+                            ).astype(self.cfg.topic_dtype)
+        with self.mesh:
+            return self._rebuild_fn(self.stacked, z_dev,
+                                    jnp.int32(iteration))
+
+    def save_checkpoint(self, mgr, state, extra_meta: dict | None = None):
+        from repro.distributed import checkpoint as ckpt
+        z_canon = ckpt.gather_canonical_z(state.z, self.stacked["token_uid"],
+                                          self.num_tokens)
+        meta = dict(extra_meta or {})
+        meta.setdefault("mode", self._mode)
+        meta.setdefault("fingerprint", ckpt.corpus_fingerprint(self.corpus))
+        meta.setdefault("num_topics", self.cfg.num_topics)
+        mgr.save(int(jax.device_get(state.iteration)), z_canon, meta)
+
+    # -- introspection for tests / roofline ---------------------------------
+    def lower_step(self):
+        key = jax.random.key(0)
+        state = jax.eval_shape(self._init_fn, self.stacked, key)
+        return self._step_fn.lower(self.stacked, state, key)

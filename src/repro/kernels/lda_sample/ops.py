@@ -1,0 +1,46 @@
+"""jit'd public wrapper for the lda_sample kernel.
+
+Adapts the trainer's data model (ELL per doc, int16 z, bool masks) to the
+kernel's layout (per-token gathered ELL, int32) and exposes an
+``impl={"pallas","ref"}`` switch so the trainer can run the kernel path
+end-to-end under interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "beta",
+                                             "num_words_total", "impl",
+                                             "interpret"))
+def lda_sample(
+    tile_word, token_doc, token_mask, z, phi_vk, phi_sum,
+    ell_counts, ell_topics, key, *,
+    alpha: float, beta: float, num_words_total: int,
+    impl: str = "pallas", interpret: bool = True,
+):
+    """Sample one sweep of word tiles.  Returns (z_new like z, sparse_frac)."""
+    n, t = z.shape
+    uniforms = jax.random.uniform(key, (n, t, 2), jnp.float32)
+    args = (
+        tile_word.astype(jnp.int32),
+        phi_vk.astype(jnp.int32),
+        phi_sum.astype(jnp.int32),
+        ell_counts[token_doc].astype(jnp.int32),   # (n, t, P)
+        ell_topics[token_doc].astype(jnp.int32),
+        uniforms,
+        token_mask.astype(jnp.int32),
+        z.astype(jnp.int32),
+    )
+    kw = dict(alpha=alpha, beta=beta, num_words_total=num_words_total)
+    if impl == "pallas":
+        z_new, sparse = kernel.lda_sample_tiles(*args, interpret=interpret, **kw)
+    else:
+        z_new, sparse = ref.lda_sample_tiles_ref(*args, **kw)
+    frac = sparse.sum() / jnp.maximum(token_mask.sum(), 1)
+    return z_new.astype(z.dtype), frac

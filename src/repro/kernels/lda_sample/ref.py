@@ -1,0 +1,66 @@
+"""Pure-jnp oracle for the lda_sample kernel.
+
+Mirrors the kernel's math exactly (same blocked search, same branch rule)
+using only jnp ops; kernel draws must match bit-for-bit given the same
+uniforms.  Also cross-checked against ``repro.core.sampler`` in tests.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import SEARCH_BLOCK, _pick_block
+
+
+def lda_sample_tiles_ref(
+    tile_word, phi_vk, phi_sum, ell_counts_t, ell_topics_t, uniforms,
+    token_mask, z_old, *, alpha, beta, num_words_total,
+):
+    n, t = z_old.shape
+    V, K = phi_vk.shape
+    B = SEARCH_BLOCK if K % SEARCH_BLOCK == 0 else _pick_block(K)
+    nb = K // B
+
+    phi_rows = phi_vk[tile_word]                              # (n, K)
+    pstar = (phi_rows.astype(jnp.float32) + beta) / (
+        phi_sum.astype(jnp.float32)[None, :] + beta * num_words_total)
+    Q = alpha * pstar.sum(-1)                                 # (n,)
+
+    blocks = pstar.reshape(n, nb, B)
+    bsum = blocks.sum(-1)
+    bcum = jnp.cumsum(bsum, axis=-1)
+    total = bcum[:, -1]
+
+    tpc = ell_topics_t                                        # (n, t, P)
+    cnt = ell_counts_t.astype(jnp.float32)
+    p1 = cnt * jnp.take_along_axis(
+        pstar[:, None, :], tpc.astype(jnp.int32), axis=2)
+    p1_cum = jnp.cumsum(p1, axis=-1)
+    S = p1_cum[..., -1]                                       # (n, t)
+
+    u1 = uniforms[..., 0]
+    u2 = uniforms[..., 1]
+    use_sparse = u1 * (S + Q[:, None]) < S
+
+    t_sp = (u2 * S)[..., None]
+    j = jnp.minimum((p1_cum <= t_sp).sum(-1), tpc.shape[-1] - 1)
+    k_sparse = jnp.take_along_axis(tpc, j[..., None], axis=-1)[..., 0]
+
+    target = u2 * total[:, None]
+    b_idx = jnp.minimum((bcum[:, None, :] <= target[..., None]).sum(-1), nb - 1)
+    prev = jnp.where(b_idx > 0,
+                     jnp.take_along_axis(bcum[:, None, :].repeat(t, 1),
+                                         jnp.maximum(b_idx - 1, 0)[..., None],
+                                         axis=-1)[..., 0],
+                     0.0)
+    seg = jnp.take_along_axis(
+        blocks[:, None, :, :].repeat(t, 1), b_idx[..., None, None]
+        .repeat(B, -1), axis=2)[:, :, 0, :]                   # (n, t, B)
+    seg_cum = jnp.cumsum(seg, axis=-1) + prev[..., None]
+    in_b = jnp.minimum((seg_cum <= target[..., None]).sum(-1), B - 1)
+    k_dense = b_idx * B + in_b
+
+    mask = token_mask != 0
+    z = jnp.where(use_sparse, k_sparse.astype(jnp.int32),
+                  k_dense.astype(jnp.int32))
+    z_new = jnp.where(mask, z, z_old)
+    return z_new, (use_sparse & mask).astype(jnp.int32)

@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: phi count update as one-hot MXU matmuls (paper §6.2).
+
+The paper updates phi with atomic adds exploiting word-locality (tokens are
+word-sorted so consecutive atomics hit the same row).  TPU has no atomics;
+the same locality becomes **output-block revisiting**: the grid walks tiles
+in word order, each tile's counts land in its word's (1, K) output block,
+and because tiles of one word are adjacent, the block stays resident in VMEM
+across the accumulation.  The per-tile count vector itself is computed as a
+ones x one-hot matmul — a (1, t) @ (t, K) systolic pass — which is the
+TPU-idiomatic segmented reduction.
+
+``tile_first`` (host-precomputed, = paper's word boundaries) zero-initializes
+each word's block on first visit; padding tiles alias the last real word with
+tile_first=False and a zero mask, so they are exact no-ops.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(meta_ref, z_ref, mask_ref, out_ref, *, num_topics: int):
+    i = pl.program_id(0)
+    first = meta_ref[i, 1]
+
+    z = z_ref[0]                                   # (t,)
+    m = mask_ref[0]                                # (t,) int32
+    onehot = (z[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, num_topics), 1)
+              ).astype(jnp.float32) * m[:, None].astype(jnp.float32)
+    ones = jnp.ones((1, z.shape[0]), jnp.float32)
+    counts = jnp.dot(ones, onehot,
+                     preferred_element_type=jnp.float32)       # (1, K) MXU
+
+    @pl.when(first == 1)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += counts.astype(jnp.int32)
+
+
+def phi_update_tiles(
+    tile_word,    # (n,) int32
+    tile_first,   # (n,) int32 (1 on the first tile of each word run)
+    z,            # (n, t) int32
+    token_mask,   # (n, t) int32
+    num_words: int,
+    num_topics: int,
+    *,
+    interpret: bool = True,
+):
+    """Accumulate phi_delta (V, K) int32 from word tiles."""
+    n, t = z.shape
+    meta = jnp.stack([tile_word.astype(jnp.int32),
+                      tile_first.astype(jnp.int32)], axis=1)   # (n, 2)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, t), lambda i, meta: (i, 0)),
+            pl.BlockSpec((1, t), lambda i, meta: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, num_topics), lambda i, meta: (meta[i, 0], 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, num_topics=num_topics),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_words, num_topics), jnp.int32),
+        interpret=interpret,
+    )(meta, z, token_mask)

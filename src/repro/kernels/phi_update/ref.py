@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for phi_update: sorted scatter-add (repro.core.updates)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def phi_update_tiles_ref(tile_word, tile_first, z, token_mask,
+                         num_words: int, num_topics: int):
+    n, t = z.shape
+    words = jnp.broadcast_to(tile_word[:, None], (n, t)).reshape(-1)
+    topics = z.reshape(-1).astype(jnp.int32)
+    inc = (token_mask != 0).reshape(-1).astype(jnp.int32)
+    phi = jnp.zeros((num_words, num_topics), jnp.int32)
+    return phi.at[words, topics].add(inc)

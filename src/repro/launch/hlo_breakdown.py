@@ -1,0 +1,69 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Hillclimb profiler: per-collective breakdown of one cell's probe HLO.
+
+Since there is no wall-clock TPU trace in this container, the "profile" is
+the lowered IR: every collective op with its result shape, bytes, and source
+location (op_name metadata), sorted by bytes.  This is what drives the
+hypothesis step of each §Perf iteration.
+
+    PYTHONPATH=src python -m repro.launch.hlo_breakdown qwen1.5-110b train_4k
+"""
+import dataclasses
+import re
+import sys
+from collections import defaultdict
+
+from repro.configs.archs import ARCHS
+from repro.launch import specs as specs_lib
+from repro.launch.dryrun import _DTYPE_BYTES, _patched_arch
+from repro.launch.mesh import make_production_mesh
+
+_RE = re.compile(
+    r"=\s+(\w+)\[([\d,]*)\][^\n]*?"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(([^\n]*)")
+
+
+def breakdown(arch: str, shape: str, blocks: int = 2):
+    cfg = ARCHS[arch]
+    small = dataclasses.replace(
+        cfg, num_layers=blocks * len(cfg.pattern) + len(cfg.tail))
+    mesh = make_production_mesh(multi_pod=False)
+    with _patched_arch(arch, small):
+        cell = specs_lib.build_cell(arch, shape, mesh)
+        compiled = cell.fn.lower(*cell.args).compile()
+    txt = compiled.as_text()
+    rows = []
+    for m in _RE.finditer(txt):
+        dtype, dims, op, rest = m.groups()
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        src = ""
+        mm = re.search(r'op_name="([^"]+)"', rest)
+        if mm:
+            src = mm.group(1)[-90:]
+        rows.append((n * _DTYPE_BYTES[dtype], op, f"{dtype}[{dims}]", src))
+    rows.sort(reverse=True)
+    total = sum(r[0] for r in rows)
+    print(f"{arch} x {shape} ({blocks}-block probe): "
+          f"{len(rows)} collectives, {total / 2**30:.2f} GiB result bytes\n")
+    by_op = defaultdict(int)
+    for b, op, _, _ in rows:
+        by_op[op] += b
+    for op, b in sorted(by_op.items(), key=lambda kv: -kv[1]):
+        print(f"  {op:20s} {b / 2**30:8.3f} GiB")
+    print("\ntop 25:")
+    for b, op, shp, src in rows[:25]:
+        print(f"  {b / 2**20:9.1f} MiB  {op:18s} {shp:28s} {src}")
+    return rows
+
+
+if __name__ == "__main__":
+    breakdown(sys.argv[1], sys.argv[2],
+              int(sys.argv[3]) if len(sys.argv) > 3 else 2)

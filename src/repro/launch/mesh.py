@@ -1,0 +1,31 @@
+"""Production meshes.
+
+Never touches jax device state at import time — meshes are built by
+functions.  The TPU-v5e production target is 16x16 = 256 chips per pod
+("data" x "model"), with a third leading "pod" axis for the 2-pod (512 chip)
+multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants (roofline denominators)
+PEAK_FLOPS_BF16 = 197e12       # per chip
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_BW = 50e9                  # bytes/s per link
+HBM_BYTES = 16 * 1024 ** 3     # 16 GiB per chip
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(n: int | None = None, name: str = "data"):
+    """All (or n) local devices on one axis — CPU tests and examples."""
+    devs = jax.devices()
+    n = len(devs) if n is None else n
+    return jax.make_mesh((n,), (name,),
+                         axis_types=(jax.sharding.AxisType.Auto,))

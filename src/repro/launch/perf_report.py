@@ -1,0 +1,40 @@
+"""§Perf before/after renderer: baseline vs optimized roofline per cell.
+
+    PYTHONPATH=src python -m repro.launch.perf_report \
+        results/dryrun_baseline.json results/final/dryrun_single.json
+"""
+import json
+import sys
+
+from repro.launch.roofline import analyze_cell
+
+
+def load(path):
+    with open(path) as f:
+        cells = json.load(f)
+    out = {}
+    for c in cells:
+        if c.get("status") == "ok" and "costs" in c:
+            out[(c["arch"], c["shape"])] = c
+    return out
+
+
+def main(base_path, opt_path):
+    base = load(base_path)
+    opt = load(opt_path)
+    print("| arch | shape | bound (b→o) | dom term s (b→o) | roofline MFU (b→o) | peak GiB (b→o) | fits |")
+    print("|---|---|---|---|---|---|---|")
+    for key in sorted(opt):
+        if key not in base:
+            continue
+        b, o = analyze_cell(base[key]), analyze_cell(opt[key])
+        bm = base[key]["memory"]["peak_device_bytes"] / 2**30
+        om = opt[key]["memory"]["peak_device_bytes"] / 2**30
+        print(f"| {key[0]} | {key[1]} | {b['bound']}→{o['bound']} | "
+              f"{b['step_time']:.3g}→{o['step_time']:.3g} | "
+              f"{b['mfu']:.1%}→{o['mfu']:.1%} | "
+              f"{bm:.1f}→{om:.1f} | {'Y' if opt[key]['fits_hbm'] else 'N'} |")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1], sys.argv[2])

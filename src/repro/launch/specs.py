@@ -1,0 +1,173 @@
+"""input_specs + sharding assembly for every (arch x shape x mesh) cell.
+
+``input_specs(arch, shape)`` returns weak-type-correct ShapeDtypeStructs for
+every model input — no device allocation anywhere (the dry-run lowers
+against these stand-ins).
+
+Sharding selection per shape:
+  * train/prefill: batch over dp axes ("pod","data"), TP+SP over "model",
+    FSDP params/optimizer over dp.
+  * decode_32k: batch over dp, KV heads over "model".
+  * long_500k (batch=1): batch replicated; the KV cache's *slot* axis is
+    sharded over the dp axes instead (context parallelism for decode) and
+    recurrent state channels over "model".
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.archs import ARCHS, SHAPES
+from repro.models import transformer as tf, zoo
+from repro.models.common import ModelConfig, ShardingPolicy
+from repro.optim import adamw
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# gradient-accumulation factor per arch for train_4k (activation fit, §Perf 9)
+TRAIN_MICRO = {
+    "qwen1.5-110b": 16,
+    "gemma3-27b": 8,
+    "gemma2-27b": 2,
+    "recurrentgemma-2b": 2,
+    "qwen3-moe-235b-a22b": 4,
+    "whisper-large-v3": 4,
+}
+
+
+def make_policy(mesh: Mesh, batch: int, kind: str = "train") -> ShardingPolicy:
+    dp_axes = tuple(a for a in mesh.axis_names if a != "model")
+    dp_size = int(np.prod([mesh.shape[a] for a in dp_axes]))
+    dp = dp_axes if batch % dp_size == 0 and batch >= dp_size else ()
+    return ShardingPolicy(dp=dp, tp="model", fsdp=True, sp=True,
+                          enabled=True, mesh=mesh,
+                          weight_gather=(kind != "decode"))
+
+
+def input_specs(arch: str, shape: str) -> dict[str, jax.ShapeDtypeStruct]:
+    """Model inputs as ShapeDtypeStructs (tokens/labels + stub frontends)."""
+    cfg = ARCHS[arch]
+    sh = SHAPES[shape]
+    B = sh["global_batch"]
+    S = sh["seq_len"]
+    if sh["kind"] == "decode":
+        out = {"token": sds((B, 1), jnp.int32)}
+    else:
+        out = {"tokens": sds((B, S), jnp.int32),
+               "labels": sds((B, S), jnp.int32)}
+    if cfg.encoder_layers:
+        out["frames"] = sds((B, cfg.encoder_frames, cfg.d_model), jnp.bfloat16)
+    if cfg.vision_tokens:
+        out["patches"] = sds((B, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def _shaped(tree):
+    return jax.tree.map(lambda x: sds(x.shape, x.dtype), tree,
+                        is_leaf=lambda x: x is None)
+
+
+class Cell(NamedTuple):
+    """Everything needed to lower one (arch x shape x mesh) combination."""
+
+    fn: Any                 # jitted step function
+    args: tuple             # ShapeDtypeStruct pytrees
+    cfg: ModelConfig
+    policy: ShardingPolicy
+    kind: str
+
+
+def _named(mesh, spec_tree):
+    def conv(s):
+        if s is None:
+            return None
+        return NamedSharding(mesh, s if isinstance(s, P) else P())
+    return jax.tree.map(conv, spec_tree,
+                        is_leaf=lambda x: x is None or isinstance(x, P))
+
+
+def build_cell(arch: str, shape: str, mesh: Mesh) -> Cell:
+    cfg = ARCHS[arch]
+    sh = SHAPES[shape]
+    B, S = sh["global_batch"], sh["seq_len"]
+    policy = make_policy(mesh, B, sh["kind"])
+    ins = input_specs(arch, shape)
+
+    p_specs = tf.param_specs(cfg, policy)
+    params_sds = jax.eval_shape(functools.partial(tf.init_params, cfg=cfg),
+                                jax.random.key(0))
+
+    if sh["kind"] == "train":
+        opt_sds = jax.eval_shape(adamw.init, params_sds)
+        state_sds = zoo.TrainState(params_sds, opt_sds)
+        opt_specs = adamw.OptState(master=p_specs, m=p_specs, v=p_specs,
+                                   step=P())
+        state_specs = zoo.TrainState(p_specs, opt_specs)
+        batch_specs = {k: (P(policy.batch(), None) if v.ndim == 2
+                           else P(policy.batch(), None, None))
+                       for k, v in ins.items()}
+        step = zoo.make_train_step(cfg, policy,
+                                   micro_batches=TRAIN_MICRO.get(arch, 1))
+        fn = jax.jit(step, in_shardings=_named(mesh, (state_specs, batch_specs)),
+                     out_shardings=(_named(mesh, state_specs), None),
+                     donate_argnums=(0,))
+        return Cell(fn, (state_sds, ins), cfg, policy, "train")
+
+    if sh["kind"] == "prefill":
+        batch_specs = {k: (P(policy.batch(), None) if v.ndim == 2
+                           else P(policy.batch(), None, None))
+                       for k, v in ins.items()}
+        step = zoo.make_prefill_step(cfg, policy)
+        fn = jax.jit(step, in_shardings=_named(mesh, (p_specs, batch_specs)),
+                     out_shardings=_named(mesh, P(policy.batch(), None, "model")))
+        return Cell(fn, (params_sds, ins), cfg, policy, "prefill")
+
+    # decode
+    long_ctx = not policy.dp  # batch too small to shard -> context parallel
+    dstate_sds = jax.eval_shape(
+        functools.partial(zoo.init_decode_state, cfg, B, S, prefill_len=S - 1))
+    d_specs = zoo.decode_state_specs(cfg, policy)
+    if long_ctx:
+        d_specs = _context_parallel_specs(cfg, mesh, d_specs)
+    tok_spec = P(policy.batch(), None)
+    step = zoo.make_decode_step(cfg, policy)
+    fn = jax.jit(step,
+                 in_shardings=_named(mesh, (p_specs, d_specs, tok_spec)),
+                 out_shardings=(_named(mesh, P(policy.batch(), None, "model")),
+                                _named(mesh, d_specs)),
+                 donate_argnums=(1,))
+    tok_sds = ins["token"]
+    return Cell(fn, (params_sds, dstate_sds, tok_sds), cfg, policy, "decode")
+
+
+def _context_parallel_specs(cfg: ModelConfig, mesh: Mesh, d_specs):
+    """long_500k: shard cache slots over the dp axes (batch=1)."""
+    from repro.models import attention as attn_lib
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+
+    tkv = ("model" if cfg.num_kv_heads and cfg.num_kv_heads
+           % mesh.shape["model"] == 0 else None)
+
+    def fix(node):
+        if isinstance(node, attn_lib.KVCache):
+            # stacked (nb, B, W, kv, hd) or tail (B, W, kv, hd)
+            if isinstance(node.pos, P) and len(node.pos) == 2:  # stacked
+                return attn_lib.KVCache(k=P(None, None, dp, tkv, None),
+                                        v=P(None, None, dp, tkv, None),
+                                        pos=P(None, dp), length=P(None))
+            return attn_lib.KVCache(k=P(None, dp, tkv, None),
+                                    v=P(None, dp, tkv, None),
+                                    pos=P(dp), length=P())
+        return node
+
+    return jax.tree.map(fix, d_specs,
+                        is_leaf=lambda x: isinstance(x, attn_lib.KVCache))

@@ -1,0 +1,291 @@
+"""Recurrent token mixers: RG-LRU (recurrentgemma) and Mamba2 SSD.
+
+TPU adaptation: both recurrences are evaluated with
+``jax.lax.associative_scan`` (parallel prefix) over the sequence — the
+TPU-native replacement for the sequential CUDA scan kernels the reference
+implementations use.  Decode is the O(1)-state recurrent step, which is what
+makes the long_500k cells run at constant memory for these families.
+
+RG-LRU (arXiv:2402.19427 §2.3):
+    r_t = sigmoid(W_a x_t + b_a);  i_t = sigmoid(W_x x_t + b_x)
+    a_t = a^(c*r_t)  with  a = sigmoid(Lambda),  c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Mamba2 SSD (arXiv:2405.21060), head-parallel scalar-decay SSM:
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t ⊗ x_t        (N x P per head)
+    y_t = C_t · h_t + D * x_t
+evaluated chunkwise: intra-chunk quadratic attention-like term + inter-chunk
+state carry (the "state-space duality" form), all dense einsums for the MXU.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import Array, ModelConfig, ShardingPolicy, init_dense
+
+RGLRU_C = 8.0
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU block (recurrentgemma): conv1d + gated linear recurrence
+# ---------------------------------------------------------------------------
+
+class RGLRUParams(NamedTuple):
+    w_in: Array        # (D, R)  input projection (to recurrence width)
+    w_gate_a: Array    # (R,) -> recurrence gate (diagonal, per channel)
+    b_gate_a: Array
+    w_gate_x: Array    # (R,)
+    b_gate_x: Array
+    log_lambda: Array  # (R,) recurrence decay parameter
+    conv_w: Array      # (W, R) depthwise causal conv
+    conv_b: Array      # (R,)
+    w_out: Array       # (R, D)
+
+
+class RGLRUState(NamedTuple):
+    h: Array           # (B, R) recurrence state
+    conv: Array        # (B, W-1, R) conv tail
+
+
+def init_rglru(key, cfg: ModelConfig) -> RGLRUParams:
+    ks = jax.random.split(key, 4)
+    D, R, W = cfg.d_model, cfg.rglru_width, cfg.conv1d_width
+    # Lambda init so a = sigmoid(Lambda) in [0.9, 0.999]
+    lam = jnp.log(jnp.linspace(0.9, 0.999, R) / (1 - jnp.linspace(0.9, 0.999, R)))
+    return RGLRUParams(
+        w_in=init_dense(ks[0], (D, R), D ** -0.5, cfg.dtype),
+        w_gate_a=jnp.zeros((R,), jnp.float32), b_gate_a=jnp.zeros((R,), jnp.float32),
+        w_gate_x=jnp.zeros((R,), jnp.float32), b_gate_x=jnp.zeros((R,), jnp.float32),
+        log_lambda=lam.astype(jnp.float32),
+        conv_w=init_dense(ks[2], (W, R), W ** -0.5, cfg.dtype),
+        conv_b=jnp.zeros((R,), cfg.dtype),
+        w_out=init_dense(ks[3], (R, D), R ** -0.5, cfg.dtype),
+    )
+
+
+def _causal_conv(x: Array, w: Array, b: Array, tail: Array | None = None):
+    """Depthwise causal conv.  x: (B,S,R), w: (W,R).  Returns y, new_tail."""
+    W = w.shape[0]
+    if tail is None:
+        xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i: i + x.shape[1], :] * w[i] for i in range(W)) + b
+    return y, xp[:, -(W - 1):, :]
+
+
+LRU_CHUNK = 512  # bounds associative_scan temporaries (O(C log C) per chunk)
+
+
+def _lru_scan(a: Array, bx: Array, h0: Array | None = None):
+    """h_t = a_t * h_{t-1} + bx_t: chunked parallel prefix.
+
+    associative_scan materializes O(log S) tree levels; at S=4k, R=2560 that
+    is tens of GB.  Chunking to LRU_CHUNK runs the parallel prefix inside a
+    chunk and carries the last state across chunks with a sequential scan —
+    same math, memory bounded by one chunk's tree."""
+    def op(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, br + ar * bl
+
+    B, S, R = a.shape
+    if h0 is not None:  # fold initial state into step 0
+        bx = bx.at[:, 0].add(a[:, 0] * h0)
+    if S <= 2 * LRU_CHUNK or S % LRU_CHUNK:
+        _, h = jax.lax.associative_scan(op, (a, bx), axis=1)
+        return h
+
+    nc = S // LRU_CHUNK
+    ac = a.reshape(B, nc, LRU_CHUNK, R).swapaxes(0, 1)
+    bc = bx.reshape(B, nc, LRU_CHUNK, R).swapaxes(0, 1)
+
+    def chunk_step(h_in, inp):
+        a_i, b_i = inp
+        b_i = b_i.at[:, 0].add(a_i[:, 0] * h_in)
+        _, h = jax.lax.associative_scan(op, (a_i, b_i), axis=1)
+        return h[:, -1], h
+
+    _, hs = jax.lax.scan(chunk_step, jnp.zeros((B, R), a.dtype), (ac, bc))
+    return hs.swapaxes(0, 1).reshape(B, S, R)
+
+
+def rglru(p: RGLRUParams, cfg: ModelConfig, x: Array, policy: ShardingPolicy,
+          state: RGLRUState | None = None):
+    """x: (B, S, D) -> (B, S, D), new_state."""
+    u = jnp.einsum("bsd,dr->bsr", x, p.w_in.astype(x.dtype))
+    u = policy.constraint(u, policy.ffn())
+    u, conv_tail = _causal_conv(u, p.conv_w.astype(u.dtype), p.conv_b.astype(u.dtype),
+                                state.conv if state is not None else None)
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf * p.w_gate_a + p.b_gate_a)
+    i = jax.nn.sigmoid(uf * p.w_gate_x + p.b_gate_x)
+    log_a = -RGLRU_C * r * jax.nn.softplus(p.log_lambda)   # log a_t <= 0
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * uf)
+    h = _lru_scan(a, gated, state.h if state is not None else None)
+    y = jnp.einsum("bsr,rd->bsd", h.astype(x.dtype), p.w_out.astype(x.dtype))
+    y = policy.constraint(y, policy.act())
+    new_state = RGLRUState(h=h[:, -1], conv=conv_tail)
+    return y, new_state
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int, key=None) -> RGLRUState:
+    R, W = cfg.rglru_width, cfg.conv1d_width
+    if key is not None:
+        h = jax.random.normal(key, (batch, R), jnp.float32) * 0.1
+    else:
+        h = jnp.zeros((batch, R), jnp.float32)
+    return RGLRUState(h=h, conv=jnp.zeros((batch, W - 1, R), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD block
+# ---------------------------------------------------------------------------
+
+class SSDParams(NamedTuple):
+    w_z: Array       # (D, HP) gate projection
+    w_x: Array       # (D, HP) value projection
+    w_B: Array       # (D, N)
+    w_C: Array       # (D, N)
+    w_dt: Array      # (D, H)
+    log_a: Array     # (H,) per-head decay
+    d_skip: Array    # (H,)
+    dt_bias: Array   # (H,)
+    norm_w: Array    # (HP,) gated RMSNorm weight
+    w_out: Array     # (HP, D)
+
+
+class SSDState(NamedTuple):
+    h: Array         # (B, H, P, N) SSM state
+
+
+def ssd_dims(cfg: ModelConfig) -> tuple[int, int, int]:
+    P = cfg.ssm_head_dim
+    H = (2 * cfg.d_model) // P       # expansion factor 2 (mamba2 default)
+    N = cfg.ssm_state
+    return H, P, N
+
+
+def init_ssd(key, cfg: ModelConfig) -> SSDParams:
+    ks = jax.random.split(key, 8)
+    D = cfg.d_model
+    H, P, N = ssd_dims(cfg)
+    return SSDParams(
+        w_z=init_dense(ks[3], (D, H * P), D ** -0.5, cfg.dtype),
+        w_x=init_dense(ks[4], (D, H * P), D ** -0.5, cfg.dtype),
+        w_B=init_dense(ks[5], (D, N), D ** -0.5, cfg.dtype),
+        w_C=init_dense(ks[6], (D, N), D ** -0.5, cfg.dtype),
+        w_dt=init_dense(ks[7], (D, H), D ** -0.5, cfg.dtype),
+        log_a=jnp.log(jnp.linspace(1.0, 16.0, H)),
+        d_skip=jnp.ones((H,), jnp.float32),
+        dt_bias=jnp.zeros((H,), jnp.float32),
+        norm_w=jnp.ones((H * P,), jnp.float32),
+        w_out=init_dense(ks[2], (H * P, D), (H * P) ** -0.5, cfg.dtype),
+    )
+
+
+def _ssd_chunked(xh: Array, dt: Array, A: Array, Bm: Array, Cm: Array,
+                 chunk: int, h0: Array | None):
+    """SSD core.  xh: (B,S,H,P); dt: (B,S,H); A: (H,)<0; Bm/Cm: (B,S,N).
+
+    Returns y: (B,S,H,P), h_last: (B,H,P,N).
+    """
+    B, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    nc = S // chunk
+    c = chunk
+    xc = xh.reshape(B, nc, c, H, P)
+    dtc = dt.reshape(B, nc, c, H)
+    Bc = Bm.reshape(B, nc, c, N)
+    Cc = Cm.reshape(B, nc, c, N)
+
+    da = dtc * A                                   # (B,nc,c,H) log-decay per step
+    cum = jnp.cumsum(da, axis=2)                   # within-chunk cumulative
+    # --- intra-chunk (quadratic, attention-like, MXU) ---
+    # L[i,j] = exp(cum_i - cum_j) for i >= j
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]     # (B,nc,c,c,H)
+    mask = jnp.tril(jnp.ones((c, c), bool))
+    # mask BEFORE exp: masked entries have diff > 0 and would overflow, and
+    # where() after exp leaks NaN into the backward pass
+    diff = jnp.where(mask[None, None, :, :, None], diff, -30.0)
+    L = jnp.exp(diff)
+    scores = jnp.einsum("bxin,bxjn->bxij", Cc, Bc)           # (B,nc,c,c)
+    W = scores[..., None] * L * dtc[:, :, None, :, :]        # (B,nc,c,c,H)
+    y_intra = jnp.einsum("bnijh,bnjhp->bnihp", W, xc)
+
+    # --- chunk states ---
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)          # (B,nc,c,H)
+    states = jnp.einsum("bxch,bxcn,bxchp->bxhpn",
+                        dtc * decay_to_end, Bc, xc)          # (B,nc,H,P,N)
+    # --- inter-chunk recurrence over nc (associative scan) ---
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                  # (B,nc,H)
+    if h0 is not None:
+        states = states.at[:, 0].add(chunk_decay[:, 0, :, None, None] * h0)
+    def op(l, r):
+        al, sl = l
+        ar, sr = r
+        return al * ar, sr + ar[..., None, None] * sl
+    _, hcum = jax.lax.associative_scan(op, (chunk_decay, states), axis=1)
+    h_prev = jnp.concatenate(
+        [jnp.zeros_like(hcum[:, :1]) if h0 is None else h0[:, None],
+         hcum[:, :-1]], axis=1)                              # state entering chunk
+    # --- inter-chunk output ---
+    in_decay = jnp.exp(cum)                                  # decay from chunk start
+    y_inter = jnp.einsum("bxcn,bxch,bxhpn->bxchp",
+                         Cc, in_decay, h_prev)
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    return y, hcum[:, -1]
+
+
+def ssd(p: SSDParams, cfg: ModelConfig, x: Array, policy: ShardingPolicy,
+        state: SSDState | None = None):
+    """Mamba2 mixer.  x: (B,S,D) -> (B,S,D), new_state."""
+    B, S, D = x.shape
+    H, P, N = ssd_dims(cfg)
+    z = jnp.einsum("bsd,di->bsi", x, p.w_z.astype(x.dtype))
+    xh = jnp.einsum("bsd,di->bsi", x, p.w_x.astype(x.dtype))
+    Bm = jnp.einsum("bsd,dn->bsn", x, p.w_B.astype(x.dtype))
+    Cm = jnp.einsum("bsd,dn->bsn", x, p.w_C.astype(x.dtype))
+    dt = jnp.einsum("bsd,dh->bsh", x, p.w_dt.astype(x.dtype))
+    xh = xh.reshape(B, S, H, P)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p.dt_bias)      # (B,S,H)
+    A = -jnp.exp(p.log_a)                                         # (H,) < 0
+    Bf, Cf = Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+
+    if state is None and S > 1:
+        chunk = min(cfg.ssm_chunk, S)
+        pad = -S % chunk
+        if pad:
+            xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            Bf = jnp.pad(Bf, ((0, 0), (0, pad), (0, 0)))
+            Cf = jnp.pad(Cf, ((0, 0), (0, pad), (0, 0)))
+        y, h_last = _ssd_chunked(xh.astype(jnp.float32), dt, A, Bf, Cf, chunk, None)
+        y = y[:, :S]
+    else:  # decode: single recurrent step
+        h0 = state.h if state is not None else jnp.zeros((B, H, P, N), jnp.float32)
+        a_t = jnp.exp(dt[:, 0] * A)                               # (B,H)
+        h_last = (a_t[..., None, None] * h0
+                  + jnp.einsum("bh,bn,bhp->bhpn", dt[:, 0], Bf[:, 0],
+                               xh[:, 0].astype(jnp.float32)))
+        y = jnp.einsum("bn,bhpn->bhp", Cf[:, 0], h_last)[:, None]
+    y = y + p.d_skip[None, None, :, None] * xh[:, :S].astype(jnp.float32)
+    y = y.reshape(B, S, H * P)
+    # gated RMSNorm (mamba2)
+    from .common import rms_norm
+    y = rms_norm(p.norm_w, y.astype(x.dtype) * jax.nn.silu(z), cfg.norm_eps, False)
+    out = jnp.einsum("bsi,id->bsd", y, p.w_out.astype(x.dtype))
+    return policy.constraint(out, policy.act()), SSDState(h=h_last)
+
+
+def init_ssd_state(cfg: ModelConfig, batch: int, key=None) -> SSDState:
+    H, P, N = ssd_dims(cfg)
+    if key is not None:
+        h = jax.random.normal(key, (batch, H, P, N), jnp.float32) * 0.1
+    else:
+        h = jnp.zeros((batch, H, P, N), jnp.float32)
+    return SSDState(h=h)

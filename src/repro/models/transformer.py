@@ -1,0 +1,360 @@
+"""Model assembly: decoder blocks, scan-over-layers, heads, train/serve steps.
+
+Structure:
+  * a *block* = one repetition of ``cfg.pattern`` (e.g. gemma3's 5 local + 1
+    global layers).  Parameters are stacked per-pattern-slot with a leading
+    (num_blocks,) axis and the forward pass is ``lax.scan`` over blocks with
+    ``jax.checkpoint`` (remat) around the body — compile time and HLO size
+    stay O(pattern), not O(L), which is what makes the 94-layer MoE dry-run
+    compile in seconds.
+  * the residual stream between blocks is sequence-sharded over the TP axis
+    when the sharding policy enables SP (saved activations 1/|tp| per device).
+  * enc-dec (whisper) and VLM (internvl2) wrap the same decoder with a
+    stubbed modality frontend per the assignment (precomputed frame/patch
+    embeddings come in through input_specs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_lib
+from . import moe as moe_lib
+from . import recurrent as rec_lib
+from .common import (Array, LayerSpec, ModelConfig, ShardingPolicy, dense,
+                     init_dense, padded_vocab, rms_norm, softcap)
+
+
+class MLPParams(NamedTuple):
+    w_gate: Array   # (D, F)
+    w_up: Array     # (D, F)
+    w_down: Array   # (F, D)
+
+
+def init_mlp(key, cfg: ModelConfig) -> MLPParams:
+    ks = jax.random.split(key, 3)
+    D, F = cfg.d_model, cfg.d_ff
+    return MLPParams(
+        w_gate=init_dense(ks[0], (D, F), D ** -0.5, cfg.dtype),
+        w_up=init_dense(ks[1], (D, F), D ** -0.5, cfg.dtype),
+        w_down=init_dense(ks[2], (F, D), F ** -0.5, cfg.dtype),
+    )
+
+
+def mlp(p: MLPParams, x: Array, policy: ShardingPolicy) -> Array:
+    from jax.sharding import PartitionSpec as P
+    F = p.w_gate.shape[-1]
+    wg = policy.gather_fsdp(p.w_gate, P(None, policy.shard_if(F)))
+    wu = policy.gather_fsdp(p.w_up, P(None, policy.shard_if(F)))
+    wd = policy.gather_fsdp(p.w_down, P(policy.shard_if(F), None))
+    h = jax.nn.silu(dense(wg, x)) * dense(wu, x)
+    h = policy.constraint(h, policy.ffn())
+    return dense(wd, h)
+
+
+class LayerParams(NamedTuple):
+    """One layer: mixer (attn/rglru/ssd) + ffn (mlp/moe) + norms.
+
+    ``cross``/``norm_c`` are the enc-dec cross-attention params (whisper
+    decoder); None elsewhere."""
+
+    norm1: Array
+    mixer: Any
+    norm2: Array
+    ffn: Any
+    cross: Any = None
+    norm_c: Array | None = None
+
+
+def init_layer(key, cfg: ModelConfig, spec: LayerSpec,
+               cross: bool = False) -> LayerParams:
+    k1, k2, k3 = jax.random.split(key, 3)
+    D = cfg.d_model
+    if spec.kind in ("global", "local"):
+        mixer = attn_lib.init_attn(k1, cfg)
+    elif spec.kind == "rglru":
+        mixer = rec_lib.init_rglru(k1, cfg)
+    elif spec.kind == "ssd":
+        mixer = rec_lib.init_ssd(k1, cfg)
+    else:
+        raise ValueError(spec.kind)
+    ffn = (moe_lib.init_moe(k2, cfg) if cfg.is_moe
+           else init_mlp(k2, cfg) if cfg.d_ff > 0 else None)
+    ones = (jnp.zeros if cfg.rms_offset else jnp.ones)
+    return LayerParams(
+        norm1=ones((D,), jnp.float32),
+        mixer=mixer,
+        norm2=ones((D,), jnp.float32),
+        ffn=ffn,
+        cross=attn_lib.init_attn(k3, cfg) if cross else None,
+        norm_c=ones((D,), jnp.float32) if cross else None,
+    )
+
+
+def apply_layer(p: LayerParams, cfg: ModelConfig, spec: LayerSpec, x: Array,
+                positions: Array, policy: ShardingPolicy,
+                state=None, decode: bool = False, enc_kv=None):
+    """Pre-norm residual layer.  Returns (y, new_mixer_state)."""
+    h = rms_norm(p.norm1, x, cfg.norm_eps, cfg.rms_offset)
+    new_state = None
+    if spec.kind in ("global", "local"):
+        window = spec.window if spec.kind == "local" else None
+        if decode:
+            a, new_state = attn_lib.decode_attention(p.mixer, cfg, h, state,
+                                                     policy, window)
+        else:
+            a = attn_lib.attention(p.mixer, cfg, h, positions, policy, window)
+    elif spec.kind == "rglru":
+        a, new_state = rec_lib.rglru(p.mixer, cfg, h, policy, state)
+    elif spec.kind == "ssd":
+        a, new_state = rec_lib.ssd(p.mixer, cfg, h, policy, state)
+    x = x + a
+    if p.cross is not None and enc_kv is not None:
+        h = rms_norm(p.norm_c, x, cfg.norm_eps, cfg.rms_offset)
+        x = x + attn_lib.cross_attention(p.cross, cfg, h, enc_kv, policy)
+    if p.ffn is not None:
+        h = rms_norm(p.norm2, x, cfg.norm_eps, cfg.rms_offset)
+        f = (moe_lib.moe_ffn(p.ffn, cfg, h, policy) if cfg.is_moe
+             else mlp(p.ffn, h, policy))
+        x = x + f
+    return policy.constraint(x, policy.act(seq_shard=True)), new_state
+
+
+# ---------------------------------------------------------------------------
+# Whole-model parameters
+# ---------------------------------------------------------------------------
+
+class ModelParams(NamedTuple):
+    embed: Array                     # (V, D)
+    blocks: Any                      # pytree stacked (num_blocks, ...) per slot
+    final_norm: Array                # (D,)
+    unembed: Array | None            # (D, V) if untied
+    encoder: Any = None              # whisper: encoder blocks + norm
+    enc_proj: Any = None             # whisper/vlm frontends (projections)
+    tail: Any = None                 # unscanned trailing layers (cfg.tail)
+
+
+def init_params(key, cfg: ModelConfig) -> ModelParams:
+    keys = jax.random.split(key, cfg.num_blocks * len(cfg.pattern) + 4)
+    blocks = []
+    ki = 0
+    per_slot = []
+    has_cross = cfg.encoder_layers > 0
+    for s, spec in enumerate(cfg.pattern):
+        slot_layers = []
+        for b in range(cfg.num_blocks):
+            slot_layers.append(init_layer(keys[ki], cfg, spec, cross=has_cross))
+            ki += 1
+        per_slot.append(jax.tree.map(lambda *xs: jnp.stack(xs), *slot_layers))
+    # N(0, 1/sqrt(D)) so the sqrt(D) embedding multiplier yields unit-scale
+    # activations and tied logits stay O(1) at init
+    embed = init_dense(keys[-1], (padded_vocab(cfg.vocab_size), cfg.d_model),
+                       cfg.d_model ** -0.5, cfg.dtype)
+    encoder = None
+    enc_proj = None
+    if cfg.encoder_layers:
+        enc_keys = jax.random.split(keys[-2], cfg.encoder_layers + 1)
+        enc_layers = [init_layer(enc_keys[i], cfg, LayerSpec("global"))
+                      for i in range(cfg.encoder_layers)]
+        encoder = (jax.tree.map(lambda *xs: jnp.stack(xs), *enc_layers),
+                   jnp.ones((cfg.d_model,), jnp.float32))
+    if cfg.vision_tokens:
+        enc_proj = init_dense(keys[-3], (cfg.d_model, cfg.d_model), None, cfg.dtype)
+    tail = None
+    if cfg.tail:
+        tkeys = jax.random.split(jax.random.fold_in(key, 7), len(cfg.tail))
+        tail = tuple(init_layer(tkeys[i], cfg, sp, cross=has_cross)
+                     for i, sp in enumerate(cfg.tail))
+    return ModelParams(
+        embed=embed,
+        blocks=tuple(per_slot),
+        final_norm=(jnp.zeros if cfg.rms_offset else jnp.ones)((cfg.d_model,), jnp.float32),
+        unembed=(None if cfg.tie_embeddings
+                 else init_dense(keys[-4],
+                                 (cfg.d_model, padded_vocab(cfg.vocab_size)),
+                                 None, cfg.dtype)),
+        encoder=encoder,
+        enc_proj=enc_proj,
+        tail=tail,
+    )
+
+
+def param_specs(cfg: ModelConfig, policy: ShardingPolicy) -> ModelParams:
+    """PartitionSpec pytree matching init_params (for in_shardings)."""
+    from jax.sharding import PartitionSpec as P
+
+    def attn_spec(_p: attn_lib.AttnParams | None = None):
+        tq = policy.shard_if(cfg.num_heads)     # replicate when H % tp != 0
+        tkv = policy.shard_if(cfg.num_kv_heads)  # GQA: kv often < tp
+        fs = policy._fs()
+        return attn_lib.AttnParams(
+            wq=P(fs, tq, None), wk=P(fs, tkv, None), wv=P(fs, tkv, None),
+            wo=P(tq, None, fs),
+            bq=P(tq, None), bk=P(tkv, None), bv=P(tkv, None),
+            q_norm=P(None), k_norm=P(None))
+
+    def mixer_spec(spec: LayerSpec):
+        if spec.kind in ("global", "local"):
+            return attn_spec()
+        if spec.kind == "rglru":
+            return rec_lib.RGLRUParams(
+                w_in=policy.p_mlp_in(), w_gate_a=P(policy.tp), b_gate_a=P(policy.tp),
+                w_gate_x=P(policy.tp), b_gate_x=P(policy.tp), log_lambda=P(policy.tp),
+                conv_w=P(None, policy.tp), conv_b=P(policy.tp),
+                w_out=policy.p_mlp_out())
+        if spec.kind == "ssd":
+            from repro.models.recurrent import ssd_dims
+            H, Pd, N = ssd_dims(cfg)
+            fsd = policy._fs()
+            return rec_lib.SSDParams(
+                w_z=P(fsd, policy.shard_if(H * Pd)),
+                w_x=P(fsd, policy.shard_if(H * Pd)),
+                w_B=P(fsd, policy.shard_if(N)),
+                w_C=P(fsd, policy.shard_if(N)),
+                w_dt=P(fsd, policy.shard_if(H)),
+                log_a=P(None), d_skip=P(None),
+                dt_bias=P(None), norm_w=P(policy.shard_if(H * Pd)),
+                w_out=P(policy.shard_if(H * Pd), fsd))
+        raise ValueError(spec.kind)
+
+    def ffn_spec():
+        if cfg.is_moe:
+            return moe_lib.MoEParams(
+                router=P(policy._fs(), None), w_gate=policy.p_moe_in(),
+                w_up=policy.p_moe_in(), w_down=policy.p_moe_out())
+        if cfg.d_ff > 0:
+            return MLPParams(w_gate=policy.p_mlp_in(), w_up=policy.p_mlp_in(),
+                             w_down=policy.p_mlp_out())
+        return None
+
+    def layer_spec(spec: LayerSpec, cross: bool = False):
+        return LayerParams(norm1=P(None), mixer=mixer_spec(spec),
+                           norm2=P(None), ffn=ffn_spec(),
+                           cross=attn_spec() if cross else None,
+                           norm_c=P(None) if cross else None)
+
+    def stacked(tree):
+        """blocks carry a leading (num_blocks,) axis — prepend None."""
+        return jax.tree.map(
+            lambda sp: sp if sp is None else P(None, *sp), tree,
+            is_leaf=lambda x: x is None or isinstance(x, P))
+
+    enc = None
+    if cfg.encoder_layers:
+        enc = (stacked(layer_spec(LayerSpec("global"))), P(None))
+    return ModelParams(
+        embed=policy.p_embed(),
+        blocks=tuple(stacked(layer_spec(s, cross=cfg.encoder_layers > 0))
+                     for s in cfg.pattern),
+        final_norm=P(None),
+        unembed=(None if cfg.tie_embeddings else policy.p_embed()),
+        encoder=enc,
+        enc_proj=(P(None, None) if cfg.vision_tokens else None),
+        tail=(tuple(layer_spec(s, cross=cfg.encoder_layers > 0)
+                    for s in cfg.tail) if cfg.tail else None),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _scan_blocks(params: ModelParams, cfg: ModelConfig, x: Array,
+                 positions: Array, policy: ShardingPolicy,
+                 remat: bool = True, enc: Array | None = None) -> Array:
+    pattern = cfg.pattern
+
+    def block_body(h, slot_params):
+        for s, spec in enumerate(pattern):
+            lp = slot_params[s]
+            enc_kv = None
+            if enc is not None and lp.cross is not None:
+                ck = jnp.einsum("bsd,dhk->bshk", enc, lp.cross.wk.astype(enc.dtype))
+                cv = jnp.einsum("bsd,dhk->bshk", enc, lp.cross.wv.astype(enc.dtype))
+                enc_kv = (ck, cv)
+            h, _ = apply_layer(lp, cfg, spec, h, positions, policy,
+                               enc_kv=enc_kv)
+        return h, None
+
+    body = jax.checkpoint(block_body) if remat else block_body
+    if cfg.num_blocks <= 2:
+        # cost-probe mode: tiny block counts are unrolled so the dry-run's
+        # cost_analysis sees every block (scan bodies are counted once)
+        for b in range(cfg.num_blocks):
+            x, _ = body(x, jax.tree.map(lambda a: a[b], params.blocks))
+    else:
+        x, _ = jax.lax.scan(body, x, params.blocks)
+    if params.tail is not None:
+        for lp, spec in zip(params.tail, cfg.tail):
+            enc_kv = None
+            if enc is not None and lp.cross is not None:
+                ck = jnp.einsum("bsd,dhk->bshk", enc, lp.cross.wk.astype(enc.dtype))
+                cv = jnp.einsum("bsd,dhk->bshk", enc, lp.cross.wv.astype(enc.dtype))
+                enc_kv = (ck, cv)
+            x, _ = apply_layer(lp, cfg, spec, x, positions, policy, enc_kv=enc_kv)
+    return x
+
+
+def embed_tokens(params: ModelParams, cfg: ModelConfig, tokens: Array,
+                 policy: ShardingPolicy) -> Array:
+    x = params.embed[tokens].astype(cfg.dtype) * (cfg.d_model ** 0.5)
+    return policy.constraint(x, policy.act())
+
+
+def lm_logits(params: ModelParams, cfg: ModelConfig, x: Array,
+              policy: ShardingPolicy) -> Array:
+    x = rms_norm(params.final_norm, x, cfg.norm_eps, cfg.rms_offset)
+    from jax.sharding import PartitionSpec as P
+    vp = padded_vocab(cfg.vocab_size)
+    if params.unembed is None:
+        w = policy.gather_fsdp(params.embed, P(policy.shard_if(vp), None)).T
+    else:
+        w = policy.gather_fsdp(params.unembed, P(None, policy.shard_if(vp)))
+    logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+    logits = softcap(logits, cfg.logit_softcap)
+    if vp != cfg.vocab_size:  # mask the padded slots exactly
+        valid = jnp.arange(vp) < cfg.vocab_size
+        logits = jnp.where(valid, logits, jnp.asarray(-1e9, logits.dtype))
+    return policy.constraint(logits, policy.vocab_logits())
+
+
+def forward(params: ModelParams, cfg: ModelConfig, tokens: Array,
+            policy: ShardingPolicy, extra_embeds: Array | None = None,
+            encoder_out: Array | None = None) -> Array:
+    """tokens (B, S) -> final hidden (B, S, D).  ``extra_embeds`` is the VLM
+    patch-embedding prefix (stubbed frontend)."""
+    x = embed_tokens(params, cfg, tokens, policy)
+    if extra_embeds is not None:
+        pfx = extra_embeds.astype(cfg.dtype)
+        if params.enc_proj is not None:
+            pfx = dense(params.enc_proj, pfx)
+        x = jnp.concatenate([pfx, x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    return _scan_blocks(params, cfg, x, positions, policy, enc=encoder_out)
+
+
+def encode(params: ModelParams, cfg: ModelConfig, frames: Array,
+           policy: ShardingPolicy) -> Array:
+    """Whisper encoder over stubbed conv-frontend frame embeddings (B,F,D)."""
+    enc_blocks, enc_norm = params.encoder
+    x = frames.astype(cfg.dtype)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    # encoder layers are non-causal; inline (no pattern scan needed)
+    def enc_layer(h, lp):
+        hh = rms_norm(lp.norm1, h, cfg.norm_eps, cfg.rms_offset)
+        a = attn_lib.attention(lp.mixer, cfg, hh, positions, policy,
+                               window=None, causal=False)
+        h = h + a
+        hh = rms_norm(lp.norm2, h, cfg.norm_eps, cfg.rms_offset)
+        h = h + mlp(lp.ffn, hh, policy)
+        return policy.constraint(h, policy.act(seq_shard=True)), None
+
+    x, _ = jax.lax.scan(jax.checkpoint(enc_layer), x, enc_blocks)
+    return rms_norm(enc_norm, x, cfg.norm_eps, cfg.rms_offset)

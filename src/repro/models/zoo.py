@@ -1,0 +1,312 @@
+"""Step functions for every assigned architecture: train / prefill / decode.
+
+``train_step`` — next-token CE + AdamW update (chunked, vocab-sharded loss).
+``prefill_step`` — full-sequence forward, logits of the last position.
+``decode_step`` — one token against per-layer mixer state (ring KV caches for
+local layers, recurrent states for rglru/ssd, full cache for global attn).
+
+All functions are pure and jit/pjit-able; the dry-run lowers them with
+ShapeDtypeStruct inputs and full sharding; smoke tests run them for real on
+reduced configs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw
+from . import attention as attn_lib
+from . import recurrent as rec_lib
+from . import transformer as tf
+from .common import Array, LayerSpec, ModelConfig, ShardingPolicy
+
+LOSS_SEQ_CHUNK = 1024  # CE evaluated in seq chunks to bound logits memory
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def _ce_chunk(params, cfg, policy, h, labels):
+    """Vocab-parallel CE: the gold logit is extracted with a one-hot
+    contraction, NOT take_along_axis — gather's transpose is a scatter that
+    GSPMD can only lower by replicating the (B,S,V) logits (measured: 2x9.6
+    GiB all-gathers per step on qwen1.5-110b).  The one-hot form keeps
+    forward and backward sharded over the vocab axis."""
+    logits = tf.lm_logits(params, cfg, h, policy).astype(jnp.float32)
+    m = jax.lax.stop_gradient(logits.max(axis=-1, keepdims=True))
+    logz = jnp.log(jnp.exp(logits - m).sum(axis=-1)) + m[..., 0]
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    gold = (logits * onehot).sum(axis=-1)
+    return (logz - gold)
+
+
+def loss_fn(params, cfg: ModelConfig, policy: ShardingPolicy, batch) -> Array:
+    """Mean next-token cross entropy.  batch: dict(tokens, labels[, frames,
+    patches])."""
+    enc = None
+    if cfg.encoder_layers:
+        enc = tf.encode(params, cfg, batch["frames"], policy)
+    h = tf.forward(params, cfg, batch["tokens"], policy,
+                   extra_embeds=batch.get("patches"), encoder_out=enc)
+    labels = batch["labels"]
+    if "patches" in batch and batch["patches"] is not None:
+        h = h[:, batch["patches"].shape[1]:]  # loss on text positions only
+    B, S, _ = h.shape
+    C = min(LOSS_SEQ_CHUNK, S)
+    if S % C:
+        C = S
+    hs = h.reshape(B, S // C, C, -1).swapaxes(0, 1)
+    ls = labels.reshape(B, S // C, C).swapaxes(0, 1)
+    per_chunk = jax.lax.map(
+        jax.checkpoint(  # don't save per-chunk logits for the backward pass
+            lambda args: _ce_chunk(params, cfg, policy, args[0], args[1])),
+        (hs, ls))
+    return per_chunk.mean()
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.OptState
+
+
+def make_train_step(cfg: ModelConfig, policy: ShardingPolicy,
+                    opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig(),
+                    micro_batches: int = 1):
+    """micro_batches > 1 = gradient accumulation: activations scale by 1/u
+    at the cost of u-fold weight re-gathers — the standard fit-vs-comm trade
+    for the biggest train cells (§Perf iter 9)."""
+
+    def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        if micro_batches == 1:
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(p, cfg, policy, batch))(state.params)
+        else:
+            u = micro_batches
+            mb = jax.tree.map(
+                lambda x: x.reshape(u, x.shape[0] // u, *x.shape[1:]), batch)
+
+            def acc_step(carry, micro):
+                g_acc, l_acc = carry
+                l, g = jax.value_and_grad(
+                    lambda p: loss_fn(p, cfg, policy, micro))(state.params)
+                g = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                 g_acc, g)
+                return (g, l_acc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              state.params)
+            (grads, loss), _ = jax.lax.scan(acc_step, (g0, 0.0), mb)
+            grads = jax.tree.map(lambda g: g / u, grads)
+            loss = loss / u
+        new_params, new_opt, gnorm = adamw.apply(opt_cfg, grads, state.opt,
+                                                 state.params)
+        return (TrainState(new_params, new_opt),
+                {"loss": loss, "grad_norm": gnorm})
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+class DecodeState(NamedTuple):
+    """Per-layer mixer states, stacked (num_blocks, ...) per pattern slot.
+
+    ``cross_kv`` (enc-dec only): precomputed encoder K/V per decoder layer,
+    (num_blocks, B, F, Hkv, hd) pairs per slot."""
+
+    layer_states: Any
+    position: Array
+    cross_kv: Any = None
+    tail_states: Any = None
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      prefill_len: int = 0, key=None,
+                      dtype=jnp.bfloat16) -> DecodeState:
+    """Stand-in (or empty) decode state for every layer.
+
+    decode_* / long_* shapes lower a single-token step against a cache of
+    ``prefill_len`` tokens; the cache content is randomized via ``key`` (the
+    dry-run passes ShapeDtypeStructs so no allocation happens at all).
+    """
+    states = []
+    for s, spec in enumerate(cfg.pattern):
+        def one(b, kind=spec.kind, window=spec.window, s=s):
+            kk = None if key is None else jax.random.fold_in(key, s * 1000 + b)
+            if kind == "global":
+                return attn_lib.init_cache(cfg, batch, max_len, None, dtype,
+                                           prefill_len, kk)
+            if kind == "local":
+                return attn_lib.init_cache(cfg, batch, max_len, window, dtype,
+                                           prefill_len, kk)
+            if kind == "rglru":
+                return rec_lib.init_rglru_state(cfg, batch, kk)
+            if kind == "ssd":
+                return rec_lib.init_ssd_state(cfg, batch, kk)
+            raise ValueError(kind)
+        per_block = [one(b) for b in range(cfg.num_blocks)]
+        states.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_block))
+    cross_kv = None
+    if cfg.encoder_layers:
+        F, Hkv, hd = cfg.encoder_frames, cfg.num_kv_heads, cfg.hd
+        shape = (cfg.num_blocks, batch, F, Hkv, hd)
+        if key is not None:
+            kk = jax.random.fold_in(key, 999)
+            cross_kv = tuple(jax.random.normal(jax.random.fold_in(kk, i),
+                                               shape, dtype) * 0.02
+                             for i in range(2 * len(cfg.pattern)))
+        else:
+            cross_kv = tuple(jnp.zeros(shape, dtype)
+                             for _ in range(2 * len(cfg.pattern)))
+    tail_states = None
+    if cfg.tail:
+        def one_tail(i, kind, window):
+            kk = None if key is None else jax.random.fold_in(key, 777 + i)
+            if kind == "global":
+                return attn_lib.init_cache(cfg, batch, max_len, None, dtype,
+                                           prefill_len, kk)
+            if kind == "local":
+                return attn_lib.init_cache(cfg, batch, max_len, window, dtype,
+                                           prefill_len, kk)
+            if kind == "rglru":
+                return rec_lib.init_rglru_state(cfg, batch, kk)
+            if kind == "ssd":
+                return rec_lib.init_ssd_state(cfg, batch, kk)
+            raise ValueError(kind)
+        tail_states = tuple(one_tail(i, sp.kind, sp.window)
+                            for i, sp in enumerate(cfg.tail))
+    return DecodeState(layer_states=tuple(states),
+                       position=jnp.asarray(prefill_len, jnp.int32),
+                       cross_kv=cross_kv, tail_states=tail_states)
+
+
+def decode_state_specs(cfg: ModelConfig, policy: ShardingPolicy):
+    """PartitionSpecs for DecodeState: caches sharded (batch=dp, kv=tp)."""
+    from jax.sharding import PartitionSpec as P
+    b = policy.batch()
+    tkv = policy.shard_if(cfg.num_kv_heads)
+    # kv heads indivisible by tp -> shard the cache's slot axis over tp
+    # instead (context parallelism); masked softmax reduces over tp
+    tw = None if tkv is not None else policy.tp
+    specs = []
+    for spec in cfg.pattern:
+        if spec.kind in ("global", "local"):
+            specs.append(attn_lib.KVCache(
+                k=P(None, b, tw, tkv, None),
+                v=P(None, b, tw, tkv, None),
+                pos=P(None, tw), length=P(None)))
+        elif spec.kind == "rglru":
+            tr = policy.shard_if(cfg.rglru_width)
+            specs.append(rec_lib.RGLRUState(h=P(None, b, tr),
+                                            conv=P(None, b, None, tr)))
+        elif spec.kind == "ssd":
+            H, Pd, N = rec_lib.ssd_dims(cfg)
+            specs.append(rec_lib.SSDState(
+                h=P(None, b, policy.shard_if(H), None,
+                    policy.shard_if(N) if policy.shard_if(H) is None else None)))
+    ckv = None
+    if cfg.encoder_layers:
+        ckv = tuple(P(None, b, None, tkv, None)
+                    for _ in range(2 * len(cfg.pattern)))
+    tails = None
+    if cfg.tail:
+        def one_tail(spec):
+            if spec.kind in ("global", "local"):
+                return attn_lib.KVCache(k=P(b, tw, tkv, None),
+                                        v=P(b, tw, tkv, None),
+                                        pos=P(tw), length=P())
+            if spec.kind == "rglru":
+                tr = policy.shard_if(cfg.rglru_width)
+                return rec_lib.RGLRUState(h=P(b, tr), conv=P(b, None, tr))
+            H, Pd, N = rec_lib.ssd_dims(cfg)
+            return rec_lib.SSDState(
+                h=P(b, policy.shard_if(H), None,
+                    policy.shard_if(N) if policy.shard_if(H) is None else None))
+        tails = tuple(one_tail(sp) for sp in cfg.tail)
+    return DecodeState(layer_states=tuple(specs), position=P(), cross_kv=ckv,
+                       tail_states=tails)
+
+
+def make_decode_step(cfg: ModelConfig, policy: ShardingPolicy):
+    """One-token decode: (params, DecodeState, token (B,1)) -> (logits, state)."""
+
+    def decode_step(params: tf.ModelParams, state: DecodeState, token: Array):
+        x = tf.embed_tokens(params, cfg, token, policy)
+        pattern = cfg.pattern
+
+        def apply_block(h, slot_params, slot_states, ckv):
+            new_states = []
+            for s, spec in enumerate(pattern):
+                enc_kv = None if ckv is None else (ckv[2 * s], ckv[2 * s + 1])
+                h, ns = tf.apply_layer(slot_params[s], cfg, spec, h,
+                                       None, policy, state=slot_states[s],
+                                       decode=True, enc_kv=enc_kv)
+                new_states.append(ns)
+            return h, tuple(new_states)
+
+        if cfg.num_blocks <= 2:  # cost-probe mode (see transformer._scan_blocks)
+            new_states = []
+            for b in range(cfg.num_blocks):
+                sp, ss, ck = jax.tree.map(
+                    lambda a: a[b], (params.blocks, state.layer_states,
+                                     state.cross_kv))
+                x, ns = apply_block(x, sp, ss, ck)
+                new_states.append(ns)
+            new_states = jax.tree.map(lambda *xs: jnp.stack(xs), *new_states)
+        else:
+            # caches ride the CARRY (not xs/ys): while-loop state aliases in
+            # place, so the multi-GiB cache isn't double-buffered (measured
+            # 16.7 GiB of scan xs/ys temps on qwen1.5-110b otherwise)
+            def block_body(carry, slot_params):
+                h, caches, i = carry
+                ss, ck = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, False),
+                    (caches, state.cross_kv))
+                h, ns = apply_block(h, slot_params, ss, ck)
+                caches = jax.tree.map(
+                    lambda acc, n: jax.lax.dynamic_update_index_in_dim(
+                        acc, n.astype(acc.dtype), i, 0),
+                    caches, ns)
+                return (h, caches, i + 1), None
+
+            (x, new_states, _), _ = jax.lax.scan(
+                block_body, (x, state.layer_states, jnp.int32(0)),
+                params.blocks)
+        new_tails = None
+        if params.tail is not None:
+            new_tails = []
+            for lp, spec, st in zip(params.tail, cfg.tail, state.tail_states):
+                x, ns = tf.apply_layer(lp, cfg, spec, x, None, policy,
+                                       state=st, decode=True)
+                new_tails.append(ns)
+            new_tails = tuple(new_tails)
+        logits = tf.lm_logits(params, cfg, x, policy)
+        return logits, DecodeState(layer_states=new_states,
+                                   position=state.position + 1,
+                                   cross_kv=state.cross_kv,
+                                   tail_states=new_tails)
+
+    return decode_step
+
+
+def make_prefill_step(cfg: ModelConfig, policy: ShardingPolicy):
+    """Full-sequence forward; returns last-position logits (no backward)."""
+
+    def prefill_step(params: tf.ModelParams, batch) -> Array:
+        enc = None
+        if cfg.encoder_layers:
+            enc = tf.encode(params, cfg, batch["frames"], policy)
+        h = tf.forward(params, cfg, batch["tokens"], policy,
+                       extra_embeds=batch.get("patches"), encoder_out=enc)
+        return tf.lm_logits(params, cfg, h[:, -1:], policy)
+
+    return prefill_step

@@ -1,0 +1,34 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests see 1 real device;
+multi-device behaviour is tested via subprocesses (test_distributed)."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(scope="session")
+def tiny_corpus():
+    from repro.data.synthetic import lda_corpus
+    return lda_corpus(num_docs=40, num_words=96, num_topics=8,
+                      avg_doc_len=36, seed=1)
+
+
+@pytest.fixture(scope="session")
+def zipf_corpus_small():
+    from repro.data.synthetic import zipf_corpus
+    return zipf_corpus(num_docs=64, num_words=200, avg_doc_len=50, seed=3)
+
+
+def run_subprocess(code: str, devices: int = 8, timeout: int = 420) -> str:
+    """Run a snippet under a forced host-device count (SPMD tests)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=timeout)
+    assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"
+    return res.stdout

@@ -1,0 +1,102 @@
+"""Corpus layer: partition balance (C1), word-major tiling (C6), uid maps."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.corpus import (Corpus, ell_capacity, partition_by_document,
+                               tile_corpus, tile_shard)
+
+
+def make_corpus(doc_ids, word_ids, D, V):
+    return Corpus(np.asarray(doc_ids, np.int32), np.asarray(word_ids, np.int32),
+                  D, V)
+
+
+class TestPartition:
+    def test_balanced_by_tokens(self, zipf_corpus_small):
+        parts = partition_by_document(zipf_corpus_small, 4)
+        lengths = zipf_corpus_small.doc_lengths()
+        loads = [lengths[p].sum() for p in parts]
+        assert max(loads) - min(loads) <= lengths.max()  # LPT bound
+        # every doc exactly once
+        all_docs = np.sort(np.concatenate(parts))
+        assert (all_docs == np.arange(zipf_corpus_small.num_docs)).all()
+
+    def test_single_shard_identity(self, tiny_corpus):
+        (part,) = partition_by_document(tiny_corpus, 1)
+        assert (part == np.arange(tiny_corpus.num_docs)).all()
+
+
+class TestTiling:
+    def test_tiles_never_mix_words(self, zipf_corpus_small):
+        sh = tile_corpus(zipf_corpus_small, 1, tile_tokens=16)[0]
+        # tokens in a tile all belong to tile_word: verified via uid lookup
+        uid = np.asarray(sh.token_uid)
+        mask = np.asarray(sh.token_mask)
+        words = np.asarray(sh.tile_word)
+        for i in range(uid.shape[0]):
+            toks = uid[i][mask[i]]
+            if len(toks):
+                assert (zipf_corpus_small.word_ids[toks] == words[i]).all()
+
+    def test_uids_form_permutation(self, zipf_corpus_small):
+        sh = tile_corpus(zipf_corpus_small, 1, tile_tokens=16)[0]
+        uid = np.asarray(sh.token_uid)[np.asarray(sh.token_mask)]
+        assert len(np.unique(uid)) == zipf_corpus_small.num_tokens
+
+    def test_heavy_words_first(self, zipf_corpus_small):
+        sh = tile_corpus(zipf_corpus_small, 1, tile_tokens=16)[0]
+        counts = np.bincount(zipf_corpus_small.word_ids,
+                             minlength=zipf_corpus_small.num_words)
+        words = np.asarray(sh.tile_word)
+        first = np.asarray(sh.tile_first)
+        order = [counts[w] for w, f in zip(words, first) if f]
+        assert order == sorted(order, reverse=True)
+
+    def test_mask_matches_token_count(self, tiny_corpus):
+        sh = tile_corpus(tiny_corpus, 1, tile_tokens=32)[0]
+        assert int(np.asarray(sh.token_mask).sum()) == tiny_corpus.num_tokens
+
+    def test_doc_lengths(self, tiny_corpus):
+        sh = tile_corpus(tiny_corpus, 1, tile_tokens=32)[0]
+        np.testing.assert_array_equal(np.asarray(sh.doc_length),
+                                      tiny_corpus.doc_lengths())
+
+
+@given(
+    n_docs=st.integers(2, 12),
+    n_words=st.integers(2, 20),
+    n_tokens=st.integers(1, 300),
+    tile=st.sampled_from([4, 16, 64]),
+    shards=st.integers(1, 4),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=25, deadline=None)
+def test_tiling_roundtrip_property(n_docs, n_words, n_tokens, tile, shards, seed):
+    """Property: for any corpus, sharding+tiling preserves every token exactly
+    once with its correct (doc, word) pair."""
+    rng = np.random.default_rng(seed)
+    corpus = make_corpus(rng.integers(0, n_docs, n_tokens),
+                         rng.integers(0, n_words, n_tokens), n_docs, n_words)
+    shards_list = tile_corpus(corpus, shards, tile)
+    seen = []
+    for sh in shards_list:
+        uid = np.asarray(sh.token_uid)
+        m = np.asarray(sh.token_mask)
+        words = np.asarray(sh.tile_word)
+        dl = np.asarray(sh.doc_global)
+        docs_local = np.asarray(sh.token_doc)
+        for i in range(uid.shape[0]):
+            for j in range(uid.shape[1]):
+                if m[i, j]:
+                    tok = uid[i, j]
+                    seen.append(tok)
+                    assert corpus.word_ids[tok] == words[i]
+                    assert corpus.doc_ids[tok] == dl[docs_local[i, j]]
+    assert sorted(seen) == list(range(n_tokens))
+
+
+def test_ell_capacity_bounds(tiny_corpus):
+    P = ell_capacity(tiny_corpus, 8)
+    assert P >= min(8, int(tiny_corpus.doc_lengths().max()))
+    assert ell_capacity(tiny_corpus, 10_000) >= 8

@@ -1,0 +1,154 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, bit-exactness.
+
+Kernels run in interpret mode (CPU container); the contract tested here —
+identical draws/counts given identical uniforms — is the same one the TPU
+build must satisfy.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import updates
+from repro.core.corpus import ell_capacity, tile_corpus
+from repro.data.synthetic import lda_corpus, zipf_corpus
+from repro.kernels.lda_sample import ops as sample_ops
+from repro.kernels.lda_sample import ref as sample_ref
+from repro.kernels.phi_update import ops as phi_ops
+
+
+def setup_case(K, tile_tokens, num_docs=24, num_words=48, seed=0,
+               topic_dtype=jnp.int16):
+    corpus = lda_corpus(num_docs=num_docs, num_words=num_words, num_topics=4,
+                        avg_doc_len=30, seed=seed)
+    shard = tile_corpus(corpus, 1, tile_tokens)[0]
+    n, t = shard.token_doc.shape
+    key = jax.random.key(seed)
+    z = jax.random.randint(key, (n, t), 0, K, jnp.int32).astype(topic_dtype)
+    phi = updates.phi_from_z(z, shard.tile_word, shard.token_mask,
+                             corpus.num_words, K)
+    theta = updates.theta_from_z(z, shard.token_doc, shard.token_mask,
+                                 shard.num_docs_local, K)
+    P = ell_capacity(corpus, K)
+    cnts, tpcs, _ = updates.theta_to_ell(theta, P)
+    return corpus, shard, z, phi, phi.sum(0), cnts, tpcs, key
+
+
+@pytest.mark.parametrize("K", [128, 256, 512])     # 1, 2, 4 search blocks
+@pytest.mark.parametrize("tile_tokens", [16, 64])
+def test_lda_sample_kernel_matches_ref(K, tile_tokens):
+    corpus, shard, z, phi, phi_sum, cnts, tpcs, key = setup_case(K, tile_tokens)
+    kw = dict(alpha=50.0 / K, beta=0.01, num_words_total=corpus.num_words)
+    zk, fk = sample_ops.lda_sample(shard.tile_word, shard.token_doc,
+                                   shard.token_mask, z, phi, phi_sum,
+                                   cnts, tpcs, key, impl="pallas", **kw)
+    zr, fr = sample_ops.lda_sample(shard.tile_word, shard.token_doc,
+                                   shard.token_mask, z, phi, phi_sum,
+                                   cnts, tpcs, key, impl="ref", **kw)
+    np.testing.assert_array_equal(np.asarray(zk), np.asarray(zr))
+    assert abs(float(fk) - float(fr)) < 1e-6
+
+
+@pytest.mark.parametrize("K", [96, 192])  # non-128-multiple -> fallback block
+def test_lda_sample_odd_K(K):
+    corpus, shard, z, phi, phi_sum, cnts, tpcs, key = setup_case(K, 32)
+    kw = dict(alpha=50.0 / K, beta=0.01, num_words_total=corpus.num_words)
+    zk, _ = sample_ops.lda_sample(shard.tile_word, shard.token_doc,
+                                  shard.token_mask, z, phi, phi_sum,
+                                  cnts, tpcs, key, impl="pallas", **kw)
+    zr, _ = sample_ops.lda_sample(shard.tile_word, shard.token_doc,
+                                  shard.token_mask, z, phi, phi_sum,
+                                  cnts, tpcs, key, impl="ref", **kw)
+    np.testing.assert_array_equal(np.asarray(zk), np.asarray(zr))
+
+
+@pytest.mark.parametrize("topic_dtype", [jnp.int16, jnp.int32])
+def test_lda_sample_dtypes(topic_dtype):
+    corpus, shard, z, phi, phi_sum, cnts, tpcs, key = setup_case(
+        128, 32, topic_dtype=topic_dtype)
+    kw = dict(alpha=0.5, beta=0.01, num_words_total=corpus.num_words)
+    zk, _ = sample_ops.lda_sample(shard.tile_word, shard.token_doc,
+                                  shard.token_mask, z, phi, phi_sum,
+                                  cnts, tpcs, key, impl="pallas", **kw)
+    assert zk.dtype == topic_dtype
+    assert int(zk.max()) < 128 and int(zk.min()) >= 0
+
+
+def test_lda_sample_matches_core_sampler():
+    """Kernel == repro.core.sampler given the same uniforms (C4/C5/C7)."""
+    from repro.core import sampler as core
+    corpus, shard, z, phi, phi_sum, cnts, tpcs, key = setup_case(256, 32)
+    kw = dict(alpha=0.2, beta=0.01, num_words_total=corpus.num_words)
+    n, t = z.shape
+    uni = jax.random.uniform(key, (n, t, 2), jnp.float32)
+    zc = jnp.stack([
+        core.sample_one_tile(phi[shard.tile_word[i]], phi_sum,
+                             shard.token_doc[i], shard.token_mask[i],
+                             z[i].astype(jnp.int32), cnts, tpcs, uni[i], **kw)[0]
+        for i in range(n)])
+    zk, _ = sample_ops.lda_sample(shard.tile_word, shard.token_doc,
+                                  shard.token_mask, z, phi, phi_sum,
+                                  cnts, tpcs, key, impl="pallas", **kw)
+    np.testing.assert_array_equal(np.asarray(zc), np.asarray(zk))
+
+
+@pytest.mark.parametrize("K", [128, 256])
+@pytest.mark.parametrize("tile_tokens", [16, 64])
+def test_phi_update_kernel_matches_ref(K, tile_tokens):
+    corpus, shard, z, phi, phi_sum, cnts, tpcs, key = setup_case(K, tile_tokens)
+    dk = phi_ops.phi_update(shard.tile_word, shard.tile_first, z,
+                            shard.token_mask, num_words=corpus.num_words,
+                            num_topics=K, impl="pallas")
+    dr = phi_ops.phi_update(shard.tile_word, shard.tile_first, z,
+                            shard.token_mask, num_words=corpus.num_words,
+                            num_topics=K, impl="ref")
+    np.testing.assert_array_equal(np.asarray(dk), np.asarray(dr))
+    assert int(dk.sum()) == corpus.num_tokens
+
+
+def test_phi_update_heavy_word_spanning_tiles():
+    """Words spanning many tiles (Zipf head) accumulate across revisits."""
+    corpus = zipf_corpus(num_docs=30, num_words=20, avg_doc_len=60, seed=5)
+    shard = tile_corpus(corpus, 1, tile_tokens=8)[0]  # tiny tiles -> many revisits
+    K = 128
+    n, t = shard.token_doc.shape
+    z = jax.random.randint(jax.random.key(1), (n, t), 0, K, jnp.int32)
+    dk = phi_ops.phi_update(shard.tile_word, shard.tile_first, z,
+                            shard.token_mask, num_words=corpus.num_words,
+                            num_topics=K, impl="pallas")
+    dr = phi_ops.phi_update(shard.tile_word, shard.tile_first, z,
+                            shard.token_mask, num_words=corpus.num_words,
+                            num_topics=K, impl="ref")
+    np.testing.assert_array_equal(np.asarray(dk), np.asarray(dr))
+
+
+def test_kernel_iteration_converges(tiny_corpus):
+    """Full trainer iteration driven by the Pallas kernels end-to-end."""
+    from repro.core import trainer
+    K = 128
+    cfg = trainer.LDAConfig(num_topics=K, tile_tokens=32, tiles_per_step=8)
+    shard = tile_corpus(tiny_corpus, 1, 32)[0]
+    key = jax.random.key(0)
+    state = trainer.init_state(cfg, shard, key)
+    P = ell_capacity(tiny_corpus, K)
+    kw = dict(alpha=cfg.resolved_alpha(), beta=cfg.beta,
+              num_words_total=tiny_corpus.num_words)
+    from repro.core import likelihood
+    lls = []
+    for it in range(6):
+        theta = updates.theta_from_z(state.z, shard.token_doc,
+                                     shard.token_mask, shard.num_docs_local, K)
+        cnts, tpcs, _ = updates.theta_to_ell(theta, P)
+        z_new, _ = sample_ops.lda_sample(
+            shard.tile_word, shard.token_doc, shard.token_mask, state.z,
+            state.phi_vk, state.phi_sum, cnts, tpcs,
+            jax.random.fold_in(key, it), impl="pallas", **kw)
+        phi = phi_ops.phi_update(shard.tile_word, shard.tile_first, z_new,
+                                 shard.token_mask,
+                                 num_words=tiny_corpus.num_words, num_topics=K,
+                                 impl="pallas")
+        state = trainer.LDAState(z=z_new, phi_vk=phi, phi_sum=phi.sum(0),
+                                 iteration=state.iteration + 1)
+        ll = float(trainer.log_likelihood(cfg, shard, state)) / tiny_corpus.num_tokens
+        lls.append(ll)
+    assert lls[-1] > lls[0] + 0.2, lls

@@ -1,0 +1,31 @@
+"""Data pipeline: prefetch loader determinism + liveness."""
+import numpy as np
+
+from repro.data.loader import PrefetchLoader, lm_batches
+
+
+def test_lm_batches_deterministic():
+    mk = lm_batches(vocab=100, batch=2, seq=8, seed=3)
+    a, b = mk(5), mk(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert (mk(6)["tokens"] != a["tokens"]).any()
+
+
+def test_labels_are_shifted_tokens():
+    mk = lm_batches(vocab=50, batch=1, seq=16, seed=0)
+    b = mk(0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_prefetch_loader_streams():
+    mk = lm_batches(vocab=100, batch=2, seq=4, seed=1)
+    loader = PrefetchLoader(mk, depth=2)
+    try:
+        seen = [next(loader) for _ in range(5)]
+        assert len(seen) == 5
+        # prefetch preserves order
+        ref = mk(0)
+        np.testing.assert_array_equal(np.asarray(seen[0]["tokens"]),
+                                      ref["tokens"])
+    finally:
+        loader.close()

@@ -1,0 +1,134 @@
+"""Sampler semantics: draw distribution, S/Q vs dense equivalence, count
+invariants (the §6 validation strategy from DESIGN.md)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dense_sampler, sampler, trainer, updates
+from repro.core.corpus import tile_corpus
+
+
+def _chi2_stat(obs, exp):
+    exp = np.maximum(exp, 1e-12)
+    return float(((obs - exp) ** 2 / exp).sum())
+
+
+class TestDrawDistribution:
+    """With frozen counts, repeated draws must follow Eq. 1."""
+
+    K = 16
+
+    def setup_method(self, _):
+        rng = np.random.default_rng(0)
+        self.phi_col = jnp.asarray(rng.integers(0, 50, self.K), jnp.int32)
+        self.phi_sum = jnp.asarray(rng.integers(100, 200, self.K), jnp.int32)
+        theta_row = rng.integers(0, 5, self.K)
+        self.theta_row = theta_row
+        P = self.K
+        order = np.argsort(-theta_row, kind="stable")
+        self.ell_topics = jnp.asarray(order[None, :], jnp.int32)
+        self.ell_counts = jnp.asarray(theta_row[order][None, :], jnp.int32)
+
+    def expected_p(self, alpha, beta, V):
+        pstar = (np.asarray(self.phi_col) + beta) / (np.asarray(self.phi_sum) + beta * V)
+        p = (self.theta_row + alpha) * pstar
+        return p / p.sum()
+
+    @pytest.mark.parametrize("alpha,beta", [(0.5, 0.01), (3.0, 0.5)])
+    def test_sq_sampler_matches_eq1(self, alpha, beta):
+        V, n_draws = 64, 20_000
+        t = n_draws
+        key = jax.random.key(42)
+        uni = jax.random.uniform(key, (t, 2), jnp.float32)
+        z, _ = sampler.sample_one_tile(
+            self.phi_col, self.phi_sum,
+            jnp.zeros(t, jnp.int32), jnp.ones(t, bool), jnp.zeros(t, jnp.int32),
+            self.ell_counts, self.ell_topics, uni,
+            alpha=alpha, beta=beta, num_words_total=V)
+        obs = np.bincount(np.asarray(z), minlength=self.K) / t
+        exp = self.expected_p(alpha, beta, V)
+        # chi2 with K-1 dof: 99.9% quantile ~ 37.7 for 15 dof
+        assert _chi2_stat(obs * t, exp * t) < 60, (obs, exp)
+
+    def test_dense_sampler_matches_eq1(self):
+        alpha, beta, V, t = 0.5, 0.01, 64, 20_000
+        key = jax.random.key(7)
+        uni = jax.random.uniform(key, (t,), jnp.float32)
+        theta = jnp.asarray(self.theta_row[None, :], jnp.int32)
+        z = dense_sampler.sample_one_tile_dense(
+            self.phi_col, self.phi_sum, jnp.zeros(t, jnp.int32),
+            jnp.ones(t, bool), jnp.zeros(t, jnp.int32), theta, uni,
+            alpha=alpha, beta=beta, num_words_total=V)
+        obs = np.bincount(np.asarray(z), minlength=self.K) / t
+        exp = self.expected_p(alpha, beta, V)
+        assert _chi2_stat(obs * t, exp * t) < 60
+
+    def test_sq_and_dense_agree(self):
+        """Same frozen counts -> statistically identical draw distributions."""
+        alpha, beta, V, t = 1.0, 0.1, 64, 30_000
+        uni2 = jax.random.uniform(jax.random.key(1), (t, 2), jnp.float32)
+        uni1 = jax.random.uniform(jax.random.key(2), (t,), jnp.float32)
+        z_sq, _ = sampler.sample_one_tile(
+            self.phi_col, self.phi_sum, jnp.zeros(t, jnp.int32),
+            jnp.ones(t, bool), jnp.zeros(t, jnp.int32),
+            self.ell_counts, self.ell_topics, uni2,
+            alpha=alpha, beta=beta, num_words_total=V)
+        theta = jnp.asarray(self.theta_row[None, :], jnp.int32)
+        z_d = dense_sampler.sample_one_tile_dense(
+            self.phi_col, self.phi_sum, jnp.zeros(t, jnp.int32),
+            jnp.ones(t, bool), jnp.zeros(t, jnp.int32), theta, uni1,
+            alpha=alpha, beta=beta, num_words_total=V)
+        h_sq = np.bincount(np.asarray(z_sq), minlength=self.K)
+        h_d = np.bincount(np.asarray(z_d), minlength=self.K)
+        assert _chi2_stat(h_sq, np.maximum(h_d, 1)) < 120
+
+
+class TestCountInvariants:
+    """After any iteration: counts == rebuild-from-z, totals conserved."""
+
+    def test_invariants_sq(self, tiny_corpus):
+        self._run(tiny_corpus, "sq")
+
+    def test_invariants_dense(self, tiny_corpus):
+        self._run(tiny_corpus, "dense")
+
+    def _run(self, corpus, which):
+        cfg = trainer.LDAConfig(num_topics=8, tile_tokens=32, tiles_per_step=8,
+                                sampler=which)
+        res = trainer.train(corpus, cfg, num_iterations=3, eval_every=3)
+        st_ = res.state
+        shard = tile_corpus(corpus, 1, cfg.tile_tokens)[0]
+        # phi total = T
+        assert int(np.asarray(st_.phi_vk).sum()) == corpus.num_tokens
+        # phi rebuild matches state
+        phi2 = updates.phi_from_z(st_.z, shard.tile_word, shard.token_mask,
+                                  corpus.num_words, 8)
+        np.testing.assert_array_equal(np.asarray(phi2), np.asarray(st_.phi_vk))
+        # theta row sums = doc lengths
+        theta = updates.theta_from_z(st_.z, shard.token_doc, shard.token_mask,
+                                     shard.num_docs_local, 8)
+        np.testing.assert_array_equal(np.asarray(theta).sum(1),
+                                      corpus.doc_lengths())
+        # phi_sum = column sums over words of theta totals
+        np.testing.assert_array_equal(np.asarray(st_.phi_sum),
+                                      np.asarray(st_.phi_vk).sum(0))
+
+
+@given(K=st.sampled_from([4, 8, 32]),
+       seed=st.integers(0, 1000),
+       micro=st.sampled_from([1, 2, 4]))
+@settings(max_examples=8, deadline=None)
+def test_counts_conserved_property(K, seed, micro, ):
+    """Property: any (K, seed, schedule) keeps Σphi == T after iterations."""
+    from repro.data.synthetic import lda_corpus
+    corpus = lda_corpus(num_docs=12, num_words=30, num_topics=4,
+                        avg_doc_len=15, seed=seed)
+    cfg = trainer.LDAConfig(num_topics=K, tile_tokens=16, tiles_per_step=4,
+                            micro_chunks=micro, seed=seed)
+    res = trainer.train(corpus, cfg, num_iterations=2, eval_every=2)
+    assert int(np.asarray(res.state.phi_vk).sum()) == corpus.num_tokens
+    assert res.stats[-1][1] == 0  # no ELL overflow in exact mode

@@ -1,0 +1,78 @@
+"""Config/spec layer: arch registry completeness, input_specs shapes, the
+cell grid and its documented skips."""
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.archs import ARCHS, LONG_OK, SHAPES, cells, skipped_cells, smoke
+from repro.launch.specs import input_specs
+
+EXPECTED = {
+    "recurrentgemma-2b": dict(L=26, d=2560, H=10, kv=1, ff=7680, V=256_000),
+    "qwen3-4b": dict(L=36, d=2560, H=32, kv=8, ff=9728, V=151_936),
+    "gemma2-27b": dict(L=46, d=4608, H=32, kv=16, ff=36_864, V=256_000),
+    "qwen1.5-110b": dict(L=80, d=8192, H=64, kv=8, ff=49_152, V=152_064),
+    "gemma3-27b": dict(L=62, d=5376, H=32, kv=16, ff=21_504, V=262_144),
+    "qwen3-moe-30b-a3b": dict(L=48, d=2048, H=32, kv=4, ff=0, V=151_936,
+                              E=128, topk=8, eff=768),
+    "qwen3-moe-235b-a22b": dict(L=94, d=4096, H=64, kv=4, ff=0, V=151_936,
+                                E=128, topk=8, eff=1536),
+    "mamba2-130m": dict(L=24, d=768, H=0, kv=0, ff=0, V=50_280, ssm=128),
+    "whisper-large-v3": dict(L=32, d=1280, H=20, kv=20, ff=5120, V=51_866),
+    "internvl2-2b": dict(L=24, d=2048, H=16, kv=8, ff=8192, V=92_553),
+}
+
+
+@pytest.mark.parametrize("name", sorted(EXPECTED))
+def test_exact_assigned_config(name):
+    c = ARCHS[name]
+    e = EXPECTED[name]
+    assert c.num_layers == e["L"]
+    assert c.d_model == e["d"]
+    assert c.num_heads == e["H"]
+    assert c.num_kv_heads == e["kv"]
+    assert c.d_ff == e["ff"]
+    assert c.vocab_size == e["V"]
+    if "E" in e:
+        assert c.num_experts == e["E"]
+        assert c.num_experts_per_tok == e["topk"]
+        assert c.moe_d_ff == e["eff"]
+    if "ssm" in e:
+        assert c.ssm_state == e["ssm"]
+    # pattern covers all layers
+    assert c.num_blocks * len(c.pattern) + len(c.tail) == c.num_layers
+
+
+def test_cell_grid_covers_40_minus_skips():
+    grid = cells()
+    skips = skipped_cells()
+    assert len(grid) + len(skips) == 10 * 4
+    assert len(skips) == 6  # pure full-attention archs skip long_500k
+    for a, sh, why in skips:
+        assert sh == "long_500k" and a not in LONG_OK
+        assert why
+
+
+@pytest.mark.parametrize("arch,shape", cells())
+def test_input_specs_shapes(arch, shape):
+    specs = input_specs(arch, shape)
+    sh = SHAPES[shape]
+    if sh["kind"] == "decode":
+        assert specs["token"].shape == (sh["global_batch"], 1)
+    else:
+        assert specs["tokens"].shape == (sh["global_batch"], sh["seq_len"])
+        assert specs["labels"].shape == specs["tokens"].shape
+        assert specs["tokens"].dtype == jnp.int32
+    cfg = ARCHS[arch]
+    if cfg.encoder_layers:
+        assert specs["frames"].shape == (sh["global_batch"],
+                                         cfg.encoder_frames, cfg.d_model)
+    if cfg.vision_tokens:
+        assert specs["patches"].shape == (sh["global_batch"],
+                                          cfg.vision_tokens, cfg.d_model)
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_smoke_configs_are_small(name):
+    c = smoke(name)
+    assert c.d_model <= 64 and c.vocab_size <= 128
+    assert c.num_blocks * len(c.pattern) + len(c.tail) == c.num_layers

@@ -1,0 +1,101 @@
+"""End-to-end training behaviour: convergence vs the sequential oracle
+(paper Fig. 8 analogue), schedules, likelihood correctness."""
+import dataclasses
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import likelihood, seq_ref, trainer
+
+
+class TestConvergence:
+    ITERS = 25
+
+    @pytest.fixture(scope="class")
+    def corpus(self):
+        from repro.data.synthetic import lda_corpus
+        return lda_corpus(num_docs=40, num_words=96, num_topics=8,
+                          avg_doc_len=36, seed=1)
+
+    @pytest.fixture(scope="class")
+    def seq_lls(self, corpus):
+        lls = []
+        for it, z, theta, phi in seq_ref.train(corpus, 8, self.ITERS):
+            if it == self.ITERS - 1:
+                ll = float(likelihood.joint_log_likelihood(
+                    jnp.asarray(theta), jnp.asarray(corpus.doc_lengths()),
+                    jnp.asarray(phi.T), jnp.asarray(phi.sum(1)),
+                    50.0 / 8, 0.01)) / corpus.num_tokens
+                lls.append(ll)
+        return lls
+
+    def test_sq_converges_toward_oracle(self, corpus, seq_lls):
+        cfg = trainer.LDAConfig(num_topics=8, tile_tokens=32, tiles_per_step=8)
+        res = trainer.train(corpus, cfg, self.ITERS, eval_every=self.ITERS)
+        ll0 = res.ll_per_token[0]
+        # delayed-count CGS trails exact CGS but must land in its vicinity
+        assert ll0 > seq_lls[-1] - 0.55, (ll0, seq_lls)
+
+    def test_ll_monotone_trend(self, corpus):
+        cfg = trainer.LDAConfig(num_topics=8, tile_tokens=32, tiles_per_step=8)
+        res = trainer.train(corpus, cfg, 16, eval_every=4)
+        assert res.ll_per_token[-1] > res.ll_per_token[0] + 0.3
+
+    def test_dense_and_sq_converge_similarly(self, corpus):
+        cfg_s = trainer.LDAConfig(num_topics=8, tile_tokens=32, tiles_per_step=8)
+        cfg_d = dataclasses.replace(cfg_s, sampler="dense")
+        ll_s = trainer.train(corpus, cfg_s, 15, eval_every=15).ll_per_token[-1]
+        ll_d = trainer.train(corpus, cfg_d, 15, eval_every=15).ll_per_token[-1]
+        assert abs(ll_s - ll_d) < 0.35, (ll_s, ll_d)
+
+    def test_workschedule2_converges(self, corpus):
+        cfg = trainer.LDAConfig(num_topics=8, tile_tokens=32, tiles_per_step=8,
+                                micro_chunks=4)
+        res = trainer.train(corpus, cfg, 15, eval_every=15)
+        assert res.ll_per_token[-1] > -5.2
+
+    def test_sparse_fraction_grows(self, corpus):
+        """The paper's Fig. 7 effect: theta sparsifies, p1 hit rate rises."""
+        cfg = trainer.LDAConfig(num_topics=8, tile_tokens=32, tiles_per_step=8)
+        res = trainer.train(corpus, cfg, 12, eval_every=12)
+        early = res.stats[0][0]
+        late = res.stats[-1][0]
+        assert late >= early - 0.05  # non-decreasing (within noise)
+
+
+def test_likelihood_direct():
+    """Tiny case vs straight lgamma arithmetic in pure python."""
+    import math
+    theta = np.array([[2, 0], [1, 3]], np.int64)
+    dl = theta.sum(1)
+    phi = np.array([[1, 1], [1, 3]], np.int64)  # K x V
+    phi_sum = phi.sum(1)
+    a, b = 0.5, 0.1
+    K, V = 2, 2
+
+    def lg(x):
+        return math.lgamma(x)
+
+    want = 0.0
+    for d in range(2):
+        want += lg(K * a) - lg(dl[d] + K * a)
+        for k in range(K):
+            want += lg(theta[d, k] + a) - lg(a)
+    for k in range(K):
+        want += lg(V * b) - lg(phi_sum[k] + V * b)
+        for v in range(V):
+            want += lg(phi[k, v] + b) - lg(b)
+
+    got = float(likelihood.joint_log_likelihood(
+        jnp.asarray(theta), jnp.asarray(dl), jnp.asarray(phi.T),
+        jnp.asarray(phi_sum), a, b))
+    assert abs(got - want) < 1e-3, (got, want)
+
+
+def test_tokens_per_sec_reported(tiny_corpus):
+    cfg = trainer.LDAConfig(num_topics=8, tile_tokens=32, tiles_per_step=8)
+    res = trainer.train(tiny_corpus, cfg, 3, eval_every=3)
+    assert len(res.tokens_per_sec) == 3
+    assert all(t > 0 for t in res.tokens_per_sec)
