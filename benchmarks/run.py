@@ -9,7 +9,8 @@ import sys
 
 sys.path.insert(0, "src")
 
-from . import breakdown, convergence, flops_byte, kernels_bench, roofline_tables, scaling, throughput
+from . import (breakdown, convergence, flops_byte, kernels_bench,
+               roofline_tables, scaling, serving, throughput)
 
 SECTIONS = {
     "table1": flops_byte.run,       # Flops/Byte characterization
@@ -19,6 +20,7 @@ SECTIONS = {
     "table5": breakdown.run,        # time breakdown
     "kernels": kernels_bench.run,   # Pallas kernel paths
     "roofline": roofline_tables.run,
+    "serving": serving.run,         # fold-in latency/throughput (repro.serve)
 }
 
 

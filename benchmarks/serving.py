@@ -1,0 +1,58 @@
+"""Serving path: fold-in latency/throughput vs batch size and K.
+
+Two measurements per (B, K) point:
+  * ``foldin_*``  — the raw jitted fold-in kernel (per-batch wall time),
+    the serving analogue of the training sweep benchmark;
+  * ``engine_*``  — end-to-end through the micro-batching engine (queueing,
+    bucketing, host<->device transfers included), p50 per-request latency.
+
+Derived column: docs/sec for the kernel rows, p50 ms for the engine rows.
+"""
+import numpy as np
+
+from .common import emit, timeit
+
+
+def run():
+    import jax
+    from repro.serve import (EngineConfig, HotSwapModel, InferConfig,
+                             LDAServeEngine, ModelSnapshot)
+    from repro.serve.infer import fold_in
+
+    V, L = 2000, 64
+    rng = np.random.default_rng(0)
+    infer = InferConfig(burn_in=6, samples=3)
+
+    for K in (64, 256):
+        # synthetic frozen model with a plausible count profile
+        phi = rng.integers(0, 50, (V, K)).astype(np.int32)
+        snap = ModelSnapshot(
+            phi_vk=jax.numpy.asarray(phi),
+            phi_sum=jax.numpy.asarray(phi.sum(0)),
+            alpha=50.0 / K, beta=0.01, num_words_total=V)
+
+        for B in (1, 8, 32):
+            tokens = rng.integers(0, V, (B, L)).astype(np.int32)
+            mask = np.ones((B, L), bool)
+            key = jax.random.key(0)
+
+            def call(t=tokens, m=mask, s=snap):
+                return fold_in(
+                    s.phi_vk, s.phi_sum, t, m, key, s.alpha, s.beta,
+                    num_words_total=V, burn_in=infer.burn_in,
+                    samples=infer.samples, top_k=8)
+
+            us = timeit(call, warmup=2, iters=3)
+            emit(f"foldin_K{K}_B{B}", us, f"{B / (us / 1e6):.0f} docs/s")
+
+        # end-to-end engine path at the largest batch point
+        model = HotSwapModel(snap)
+        eng = LDAServeEngine(model, EngineConfig(
+            max_batch=32, max_delay_ms=2.0, length_buckets=(L,), infer=infer))
+        docs = [rng.integers(0, V, L).astype(np.int32) for _ in range(64)]
+        eng.infer(docs[0])  # warm compile
+        eng.infer_many(docs)
+        s = eng.stats()
+        emit(f"engine_K{K}", s["p50_ms"] * 1e3,
+             f"p99={s['p99_ms']:.1f}ms {s['docs_per_sec']:.0f} docs/s")
+        eng.stop()

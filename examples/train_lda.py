@@ -34,7 +34,7 @@ def main():
     import jax
     from repro.configs import lda_nytimes
     from repro.core import trainer
-    from repro.core.corpus import read_uci_bow, tile_corpus
+    from repro.core.corpus import ell_capacity, read_uci_bow, tile_corpus
     from repro.distributed.checkpoint import (CheckpointManager,
                                               corpus_fingerprint,
                                               gather_canonical_z,
@@ -47,7 +47,8 @@ def main():
           f"{args.topics * corpus.num_words / 1e6:.1f}M counts")
 
     cfg = trainer.LDAConfig(num_topics=args.topics, tile_tokens=256,
-                            tiles_per_step=32, sampler=args.sampler)
+                            tiles_per_step=32, sampler=args.sampler,
+                            ell_capacity=ell_capacity(corpus, args.topics))
     shard = tile_corpus(corpus, 1, cfg.tile_tokens)[0]
     mgr = CheckpointManager(args.ckpt_dir)
     fp = corpus_fingerprint(corpus)
@@ -81,7 +82,8 @@ def main():
             ll = float(ll_fn(state)) / corpus.num_tokens
             print(f"iter {it + 1:4d}  LL/token {ll:8.4f}  "
                   f"{np.mean(t_hist[-args.eval_every:]) / 1e6:6.2f}M tok/s  "
-                  f"sparse {float(stats.sparse_frac):.2f}")
+                  f"sparse {float(stats.sparse_frac):.2f}  "
+                  f"S/(S+Q) {float(stats.mean_s_over_sq):.2f}")
         if (it + 1) % args.ckpt_every == 0:
             z_canon = gather_canonical_z(state.z, shard.token_uid,
                                          corpus.num_tokens)

@@ -45,6 +45,30 @@ def word_outer_term(phi_sum: Array, beta: float, num_words_total: int) -> Array:
     return (gammaln(jnp.asarray(vb, f)) - gammaln(phi_sum.astype(f) + vb)).sum()
 
 
+def heldout_token_log_prob(
+    theta_probs: Array,   # (B, K) float — estimated doc-topic distributions
+    phi_vk: Array,        # (V, K) int — frozen topic-word counts
+    phi_sum: Array,       # (K,) int
+    tokens: Array,        # (B, L) int32 — evaluation-half word ids
+    mask: Array,          # (B, L) bool
+    beta: float,
+    num_words_total: int,
+) -> tuple[Array, Array]:
+    """Document-completion scoring (Petterson & Caetano): log p(w | theta^, phi^).
+
+    p(w | d) = sum_k theta^_dk * phi^_wk with phi^ the smoothed point
+    estimate (phi_kv + b)/(phi_sum_k + bV) — the same Eq. 1 word factor the
+    samplers use.  Returns (total log prob, token count) so callers can psum
+    both before forming perplexity = exp(-LL/N).
+    """
+    f = jnp.float32
+    phat = (phi_vk[tokens].astype(f) + beta) / (
+        phi_sum.astype(f) + beta * num_words_total)         # (B, L, K)
+    p = jnp.einsum("blk,bk->bl", phat, theta_probs.astype(f))
+    lp = jnp.where(mask, jnp.log(jnp.maximum(p, 1e-30)), 0.0)
+    return lp.sum(), mask.sum()
+
+
 def joint_log_likelihood(
     theta: Array,
     doc_length: Array,

@@ -39,20 +39,27 @@ class SamplerStats(NamedTuple):
     """Per-sweep diagnostics (cheap; all reduced scalars)."""
 
     sparse_frac: Array  # fraction of tokens drawn from p1 (sparsity hit rate)
-    mean_s_over_sq: Array
+    mean_s_over_sq: Array  # mean over tokens of S/(S+Q) — sparse mass share
 
 
-def _pstar(phi_col: Array, phi_sum: Array, beta: float, num_words_total: int) -> Array:
-    """C7: p*(k) for one word; phi_col (K,) int, phi_sum (K,) int."""
+def pstar(phi_col: Array, phi_sum: Array, beta: float, num_words_total: int) -> Array:
+    """C7: p*(k) for one word; phi_col (K,) int, phi_sum (K,) int.
+
+    Public: shared by the training sweep and the fold-in inference path
+    (repro.serve.infer), which evaluates the same Eq. 1 word factor against a
+    frozen phi snapshot.
+    """
     return (phi_col.astype(jnp.float32) + beta) / (
         phi_sum.astype(jnp.float32) + beta * num_words_total
     )
 
 
-def _blocked_search(pstar: Array, u: Array) -> Array:
+def blocked_search(pstar: Array, u: Array) -> Array:
     """C5: draw k ~ multinomial(pstar) via the two-level blocked search.
 
     pstar: (K,), u: (t,) uniforms in [0,1).  Returns (t,) int32 topics.
+    Works for any non-negative weight vector, not just p*; the serving path
+    reuses it to draw from theta-weighted distributions.
     """
     K = pstar.shape[0]
     B = SEARCH_BLOCK if K % SEARCH_BLOCK == 0 else _pick_block(K)
@@ -79,6 +86,11 @@ def _pick_block(K: int) -> int:
     return 1
 
 
+# Back-compat aliases (pre-serve these were module-private).
+_pstar = pstar
+_blocked_search = blocked_search
+
+
 def sample_one_tile(
     phi_col: Array,          # (K,) int — this word's phi row
     phi_sum: Array,          # (K,) int — global per-topic totals
@@ -92,10 +104,11 @@ def sample_one_tile(
     alpha: float,
     beta: float,
     num_words_total: int,
-) -> tuple[Array, Array]:
+) -> tuple[Array, Array, Array]:
     """Sample new topics for every token of one word tile.
 
-    Returns (z_new (t,) int, used_sparse (t,) bool).
+    Returns (z_new (t,) int, used_sparse (t,) bool, s_over_sq (t,) float32 —
+    per-token S/(S+Q) sparse mass share, 0 on padding slots).
     """
     K = phi_col.shape[0]
     pstar = _pstar(phi_col, phi_sum, beta, num_words_total)     # (K,)
@@ -123,7 +136,8 @@ def sample_one_tile(
 
     z_new = jnp.where(use_sparse, k_sparse, k_dense).astype(z_old.dtype)
     z_new = jnp.where(token_mask, z_new, z_old)
-    return z_new, use_sparse & token_mask
+    s_over_sq = jnp.where(token_mask, S / jnp.maximum(S + Q, 1e-30), 0.0)
+    return z_new, use_sparse & token_mask, s_over_sq
 
 
 def sample_sweep(
@@ -163,14 +177,14 @@ def sample_sweep(
             lambda k: jax.random.uniform(k, (t, 2), jnp.float32)
         )(keys)
         phi_cols = phi_vk[tw]                                   # (c, K) gather
-        z_new, sp = jax.vmap(
+        z_new, sp, ssq = jax.vmap(
             functools.partial(
                 sample_one_tile,
                 alpha=alpha, beta=beta, num_words_total=num_words_total,
             ),
             in_axes=(0, None, 0, 0, 0, None, None, 0),
         )(phi_cols, phi_sum, td, tm, zc, ell_counts, ell_topics, unif)
-        return carry, (z_new, sp.sum(), (tm.sum()))
+        return carry, (z_new, sp.sum(), ssq.sum(), (tm.sum()))
 
     keys = jax.random.split(key, n + n_pad).reshape(steps, tiles_per_step)
     xs = (
@@ -180,11 +194,11 @@ def sample_sweep(
         z.reshape(steps, tiles_per_step, t),
         keys,
     )
-    _, (z_chunks, sp_counts, tok_counts) = jax.lax.scan(chunk, 0, xs)
+    _, (z_chunks, sp_counts, ssq_sums, tok_counts) = jax.lax.scan(chunk, 0, xs)
     z_new = z_chunks.reshape(n + n_pad, t)[:n]
     total = jnp.maximum(tok_counts.sum(), 1)
     stats = SamplerStats(
         sparse_frac=sp_counts.sum() / total,
-        mean_s_over_sq=jnp.float32(0),  # filled by diagnostic variant
+        mean_s_over_sq=ssq_sums.sum() / total,
     )
     return z_new, stats

@@ -61,6 +61,7 @@ class LDAState(NamedTuple):
 class IterStats(NamedTuple):
     sparse_frac: Array
     ell_overflow: Array  # docs exceeding ELL capacity (0 in exact mode)
+    mean_s_over_sq: Array  # mean S/(S+Q) sparse mass share (sq sampler only)
 
 
 def state_from_z(
@@ -132,12 +133,14 @@ def lda_iteration(
                 shard.token_mask, state.z, ell_c, ell_t, key,
                 tiles_per_step=min(cfg.tiles_per_step, n), **sweep_kwargs)
             sparse_frac = stats.sparse_frac
+            mean_ssq = stats.mean_s_over_sq
         else:
             z_new = dense_sampler.sample_sweep_dense(
                 state.phi_vk, state.phi_sum, shard.tile_word, shard.token_doc,
                 shard.token_mask, state.z, theta, key,
                 tiles_per_step=min(cfg.tiles_per_step, n), **sweep_kwargs)
             sparse_frac = jnp.float32(0)
+            mean_ssq = jnp.float32(0)
     else:  # WorkSchedule2: M micro-chunks, theta refreshed between chunks
         n_pad = -n % M
         tw_a, td_a, tm_a, z_a = shard.tile_word, shard.token_doc, shard.token_mask, state.z
@@ -156,16 +159,16 @@ def lda_iteration(
                 z_c, st = sampler.sample_sweep(
                     state.phi_vk, state.phi_sum, tw, td, tm, zc, cnts, tpcs,
                     kc, tiles_per_step=min(cfg.tiles_per_step, nc), **sweep_kwargs)
-                sf = st.sparse_frac
+                sf, ssq = st.sparse_frac, st.mean_s_over_sq
             else:
                 z_c = dense_sampler.sample_sweep_dense(
                     state.phi_vk, state.phi_sum, tw, td, tm, zc, theta_c, kc,
                     tiles_per_step=min(cfg.tiles_per_step, nc), **sweep_kwargs)
-                sf = jnp.float32(0)
+                sf, ssq = jnp.float32(0), jnp.float32(0)
             delta = updates.theta_delta(zc, z_c, td, tm,
                                         theta_c.shape[0], K)
             theta_n = theta_c + sync.sync_theta(delta, model_axes)
-            return theta_n, (z_c, sf)
+            return theta_n, (z_c, sf, ssq)
 
         xs = (
             tw_a.reshape(M, nc),
@@ -174,9 +177,10 @@ def lda_iteration(
             z_a.reshape(M, nc, t),
             jax.random.split(key, M),
         )
-        _, (z_chunks, sfs) = jax.lax.scan(chunk_step, theta, xs)
+        _, (z_chunks, sfs, ssqs) = jax.lax.scan(chunk_step, theta, xs)
         z_new = z_chunks.reshape(n + n_pad, t)[:n]
         sparse_frac = sfs.mean()
+        mean_ssq = ssqs.mean()
 
     # phi rebuild + reduce/broadcast (C3)
     if cfg.compressed_sync and data_axes:
@@ -196,7 +200,8 @@ def lda_iteration(
     new_state = LDAState(z=z_new, phi_vk=phi, phi_sum=phi_sum,
                          iteration=state.iteration + 1)
     return new_state, IterStats(sparse_frac=sparse_frac,
-                                ell_overflow=overflow.sum())
+                                ell_overflow=overflow.sum(),
+                                mean_s_over_sq=mean_ssq)
 
 
 def log_likelihood(
@@ -229,7 +234,7 @@ class TrainResult:
     state: LDAState
     ll_per_token: list[float]
     tokens_per_sec: list[float]
-    stats: list[tuple[float, float]]
+    stats: list[tuple[float, float, float]]  # (sparse_frac, ell_overflow, S/(S+Q))
 
 
 def train(
@@ -253,14 +258,15 @@ def train(
 
     lls: list[float] = []
     tps: list[float] = []
-    st: list[tuple[float, float]] = []
+    st: list[tuple[float, float, float]] = []
     for it in range(num_iterations):
         t0 = time.perf_counter()
         state, stats = step(state, key)
         state.z.block_until_ready()
         dt = time.perf_counter() - t0
         tps.append(shard.num_tokens / dt)
-        st.append((float(stats.sparse_frac), float(stats.ell_overflow)))
+        st.append((float(stats.sparse_frac), float(stats.ell_overflow),
+                   float(stats.mean_s_over_sq)))
         if (it + 1) % eval_every == 0 or it == num_iterations - 1:
             ll = float(ll_fn(state)) / corpus.num_tokens
             lls.append(ll)

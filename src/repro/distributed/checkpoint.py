@@ -145,3 +145,30 @@ class CheckpointManager:
                     meta = json.load(f)
                 return s, z, meta
         return None
+
+    # -- serving snapshots ----------------------------------------------------
+    # Checkpoints restore *training* (z); snapshots publish the derived
+    # frozen model (phi + hyperparams) to the serving side (repro.serve).
+    def publish_snapshot(self, state, alpha: float, beta: float,
+                         num_words_total: int | None = None,
+                         vocab=None, meta: dict | None = None) -> str:
+        from repro.serve import snapshot as snap_mod
+
+        it = int(jax.device_get(state.iteration))
+        snap = snap_mod.snapshot_from_state(
+            state, alpha=alpha, beta=beta, num_words_total=num_words_total,
+            vocab=vocab, meta=dict(meta or {}, iteration=it))
+        path = os.path.join(self.dir, f"snapshot_{it:08d}.npz")
+        out = snap_mod.save_snapshot(path, snap)
+        # same keep-N pruning as checkpoints: a publish-every-eval training
+        # loop must not accumulate one full phi matrix per eval
+        snaps = sorted(fn for fn in os.listdir(self.dir)
+                       if fn.startswith("snapshot_") and fn.endswith(".npz"))
+        for fn in snaps[: -self.keep]:
+            os.unlink(os.path.join(self.dir, fn))
+        return out
+
+    def latest_snapshot_path(self) -> str | None:
+        snaps = sorted(fn for fn in os.listdir(self.dir)
+                       if fn.startswith("snapshot_") and fn.endswith(".npz"))
+        return os.path.join(self.dir, snaps[-1]) if snaps else None

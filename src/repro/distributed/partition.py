@@ -191,7 +191,8 @@ class DistributedLDA:
             phi_sum=repl,
             iteration=repl,
         )
-        stats_specs = core_trainer.IterStats(sparse_frac=repl, ell_overflow=repl)
+        stats_specs = core_trainer.IterStats(sparse_frac=repl, ell_overflow=repl,
+                                             mean_s_over_sq=repl)
 
         d_ax = doc_axes if mode == "2d" else lead
         m_ax = word_axes if mode == "2d" else None
@@ -230,6 +231,7 @@ class DistributedLDA:
                 sparse_frac=jax.lax.pmean(stats.sparse_frac, all_ax),
                 ell_overflow=jax.lax.psum(stats.ell_overflow, all_ax)
                 // (n_word if mode == "2d" else 1),
+                mean_s_over_sq=jax.lax.pmean(stats.mean_s_over_sq, all_ax),
             )
             return st, stats
 

@@ -1,0 +1,229 @@
+"""LDA serving launcher: online topic inference against a frozen snapshot.
+
+The paper's motivating scenario — "slow LDA may prevent the usage of LDA in
+many scenarios, e.g., online service" — closed end to end: a trained model is
+published as a snapshot (repro.serve.snapshot), and this process answers
+per-document topic queries through the micro-batching engine with hot-swap.
+
+Self-driving benchmark (trains a tiny synthetic model if the snapshot is
+missing, serves a request storm, hot-swaps a fresher snapshot mid-flight):
+
+    PYTHONPATH=src python -m repro.launch.serve_lda --snapshot /tmp/lda.npz --bench
+
+HTTP JSON endpoint (stdlib only):
+
+    PYTHONPATH=src python -m repro.launch.serve_lda --snapshot /tmp/lda.npz --port 8080
+    POST /infer  {"tokens": [3, 17, ...]}            -> theta + top topics
+    POST /swap   {"snapshot": "/path/to/newer.npz"}  -> hot-swap, no restart
+    GET  /stats | /healthz
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def build_argparser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--snapshot", required=True, help="snapshot .npz path")
+    ap.add_argument("--bench", action="store_true",
+                    help="self-drive: train-if-missing, storm, hot-swap demo")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8080)
+    # engine knobs
+    ap.add_argument("--max-batch", type=int, default=32)
+    ap.add_argument("--delay-ms", type=float, default=3.0)
+    ap.add_argument("--length-buckets", type=int, nargs="+",
+                    default=[32, 64, 128, 256])
+    ap.add_argument("--burn-in", type=int, default=8)
+    ap.add_argument("--samples", type=int, default=4)
+    ap.add_argument("--top-k", type=int, default=8)
+    # bench-mode training knobs
+    ap.add_argument("--topics", type=int, default=32)
+    ap.add_argument("--train-iters", type=int, default=25)
+    ap.add_argument("--bench-docs", type=int, default=96)
+    ap.add_argument("--seed", type=int, default=0)
+    return ap
+
+
+def make_engine(args, snap):
+    from repro.serve import EngineConfig, HotSwapModel, InferConfig, LDAServeEngine
+
+    model = HotSwapModel(snap)
+    cfg = EngineConfig(
+        max_batch=args.max_batch, max_delay_ms=args.delay_ms,
+        length_buckets=tuple(args.length_buckets),
+        infer=InferConfig(burn_in=args.burn_in, samples=args.samples,
+                          top_k=args.top_k))
+    return model, LDAServeEngine(model, cfg, seed=args.seed)
+
+
+# ---------------------------------------------------------------------------
+# bench mode
+# ---------------------------------------------------------------------------
+
+def _train_and_export(args, extra_iters: int = 0):
+    """Train the tiny synthetic model and export a snapshot to args.snapshot.
+
+    Returns (corpus, cfg, train_result) so the hot-swap demo can keep
+    training from the same corpus.
+    """
+    from repro.core import trainer
+    from repro.data.synthetic import lda_corpus
+    from repro.serve import save_snapshot, snapshot_from_state
+
+    corpus = lda_corpus(num_docs=256, num_words=400,
+                        num_topics=args.topics, avg_doc_len=64,
+                        seed=args.seed)
+    cfg = trainer.LDAConfig(num_topics=args.topics, tile_tokens=64,
+                            tiles_per_step=16, seed=args.seed)
+    res = trainer.train(corpus, cfg, args.train_iters + extra_iters,
+                        eval_every=args.train_iters + extra_iters)
+    snap = snapshot_from_state(res.state, cfg.resolved_alpha(), cfg.beta,
+                               num_words_total=corpus.num_words)
+    save_snapshot(args.snapshot, snap)
+    return corpus, cfg, res
+
+
+def run_bench(args) -> int:
+    import numpy as np
+    from repro.serve import load_snapshot
+    from repro.serve.eval import docs_from_corpus, heldout_perplexity
+
+    corpus = None
+    if not os.path.exists(args.snapshot):
+        print(f"[bench] no snapshot at {args.snapshot}; training "
+              f"K={args.topics} synthetic model ({args.train_iters} iters)")
+        t0 = time.perf_counter()
+        corpus, _, _ = _train_and_export(args)
+        print(f"[bench] trained + exported in {time.perf_counter() - t0:.1f}s")
+    snap = load_snapshot(args.snapshot)
+    print(f"[bench] snapshot: V={snap.num_words} K={snap.num_topics} "
+          f"iteration={snap.meta.get('iteration')}")
+
+    # request storm: unseen synthetic docs with the same vocabulary
+    from repro.data.synthetic import lda_corpus
+    req_corpus = lda_corpus(num_docs=args.bench_docs,
+                            num_words=snap.num_words,
+                            num_topics=snap.num_topics, avg_doc_len=64,
+                            seed=args.seed + 1)
+    docs = docs_from_corpus(req_corpus)
+
+    model, engine = make_engine(args, snap)
+    engine.infer(docs[0])  # warm the bucket compiles outside the timed storm
+    results = engine.infer_many(docs)
+    stats = engine.stats()
+    print(f"[bench] served {int(stats['requests'])} docs in "
+          f"{stats['batches']:.0f} batches (mean batch "
+          f"{stats['mean_batch']:.1f})")
+    print(f"[bench] p50 {stats['p50_ms']:.1f} ms   p99 {stats['p99_ms']:.1f} ms"
+          f"   {stats['docs_per_sec']:.1f} docs/sec")
+
+    ppl = heldout_perplexity(snap, docs[: min(32, len(docs))])
+    print(f"[bench] held-out document-completion perplexity: "
+          f"{ppl.perplexity:.1f} over {ppl.num_tokens} tokens")
+
+    # hot-swap: publish a further-trained snapshot; the engine keeps running
+    print(f"[bench] training {args.train_iters + 15} iters for the v2 snapshot")
+    _train_and_export(args, extra_iters=15)
+    snap2 = load_snapshot(args.snapshot)
+    v = model.publish(snap2)
+    results2 = engine.infer_many(docs[:16])
+    moved = max(float(np.abs(r2["theta"] - r1["theta"]).sum())
+                for r1, r2 in zip(results[:16], results2))
+    print(f"[bench] hot-swapped to model_version={v} without restart; "
+          f"max |Δtheta|₁ across redone docs = {moved:.3f}")
+    assert results2[0]["model_version"] == v
+    engine.stop()
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# HTTP mode (stdlib only — no framework deps)
+# ---------------------------------------------------------------------------
+
+def run_http(args) -> int:
+    from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+    from repro.serve import load_snapshot
+
+    snap = load_snapshot(args.snapshot)
+    model, engine = make_engine(args, snap)
+    print(f"[serve] V={snap.num_words} K={snap.num_topics} on "
+          f"http://{args.host}:{args.port}")
+
+    class Handler(BaseHTTPRequestHandler):
+        def _reply(self, code: int, obj):
+            body = json.dumps(obj).encode()
+            self.send_response(code)
+            self.send_header("Content-Type", "application/json")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def log_message(self, *a):  # quiet access log
+            pass
+
+        def do_GET(self):
+            if self.path == "/healthz":
+                self._reply(200, {"ok": True, "model_version": model.version})
+            elif self.path == "/stats":
+                self._reply(200, engine.stats())
+            else:
+                self._reply(404, {"error": "unknown path"})
+
+        def do_POST(self):
+            n = int(self.headers.get("Content-Length", 0))
+            try:
+                payload = json.loads(self.rfile.read(n) or b"{}")
+            except json.JSONDecodeError:
+                return self._reply(400, {"error": "bad json"})
+            if self.path == "/infer":
+                toks = payload.get("tokens")
+                if not isinstance(toks, list) or not toks:
+                    return self._reply(400, {"error": "tokens: [word ids]"})
+                try:
+                    res = engine.infer(toks)
+                except (ValueError, TypeError) as e:
+                    return self._reply(400, {"error": str(e)})
+                except (RuntimeError, TimeoutError) as e:
+                    return self._reply(500, {"error": str(e)})
+                return self._reply(200, {
+                    "top_topics": res["top_topics"].tolist(),
+                    "top_weights": res["top_weights"].tolist(),
+                    "theta": res["theta"].tolist(),
+                    "model_version": res["model_version"],
+                    "latency_ms": res["latency_ms"],
+                })
+            if self.path == "/swap":
+                path = payload.get("snapshot")
+                if not path or not os.path.exists(path):
+                    return self._reply(400, {"error": "snapshot path missing"})
+                try:
+                    v = model.publish(load_snapshot(path))
+                except Exception as e:  # corrupt / non-snapshot file
+                    return self._reply(400, {"error": f"bad snapshot: {e}"})
+                return self._reply(200, {"model_version": v})
+            return self._reply(404, {"error": "unknown path"})
+
+    httpd = ThreadingHTTPServer((args.host, args.port), Handler)
+    try:
+        httpd.serve_forever()
+    except KeyboardInterrupt:
+        pass
+    finally:
+        engine.stop()
+        httpd.server_close()
+    return 0
+
+
+def main(argv=None) -> int:
+    args = build_argparser().parse_args(argv)
+    return run_bench(args) if args.bench else run_http(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

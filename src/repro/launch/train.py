@@ -95,7 +95,8 @@ def run_lda(args):
         if (it + 1) % 10 == 0:
             print(f"iter {it + 1:5d}  {corpus.num_tokens / dt / 1e6:7.2f}M tok/s  "
                   f"LL/token {dl.log_likelihood(state):.4f}  "
-                  f"sparse {float(stats.sparse_frac):.2f}")
+                  f"sparse {float(stats.sparse_frac):.2f}  "
+                  f"S/(S+Q) {float(stats.mean_s_over_sq):.2f}")
         if (it + 1) % args.ckpt_every == 0:
             dl.save_checkpoint(mgr, state, {"fingerprint": fp})
     mgr.wait()

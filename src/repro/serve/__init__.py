@@ -1,0 +1,25 @@
+"""Online LDA inference & serving (the paper's "online service" scenario).
+
+Layers (each usable on its own):
+
+* ``snapshot`` — frozen-model artifact (phi + vocab + hyperparams) exported
+  from a training ``LDAState``; double-buffered hot-swap so training can
+  publish fresh phi while the server keeps answering.
+* ``infer``    — fold-in Gibbs for unseen documents against a frozen phi,
+  jitted over (B, L) token batches, reusing the training sampler's S/Q split
+  and two-level blocked search.
+* ``engine``   — micro-batching request engine: queue, shape bucketing,
+  batch-timeout flush, p50/p99 latency counters.
+* ``eval``     — held-out perplexity via the document-completion protocol.
+"""
+from repro.serve.engine import EngineConfig, LDAServeEngine
+from repro.serve.eval import PerplexityResult, heldout_perplexity
+from repro.serve.infer import FoldInResult, InferConfig, fold_in, pack_docs
+from repro.serve.snapshot import (HotSwapModel, ModelSnapshot, load_snapshot,
+                                  save_snapshot, snapshot_from_state)
+
+__all__ = [
+    "EngineConfig", "LDAServeEngine", "PerplexityResult", "heldout_perplexity",
+    "FoldInResult", "InferConfig", "fold_in", "pack_docs", "HotSwapModel",
+    "ModelSnapshot", "load_snapshot", "save_snapshot", "snapshot_from_state",
+]

@@ -1,0 +1,249 @@
+"""Micro-batching inference engine: queue -> bucketed batch -> fold-in.
+
+Request flow: callers submit one document each; a worker thread collects
+requests until either the batch is full or the oldest request has waited
+``max_delay_ms`` (batch-timeout flush), pads the batch to a (batch, length)
+*bucket*, and runs one jitted fold-in call.  Bucketing keeps the jit cache
+bounded at |batch_buckets| x |length_buckets| entries no matter what traffic
+looks like — a batch whose shapes land in an already-seen bucket never
+recompiles.
+
+phi comes from a ``HotSwapModel``: the worker acquires the active snapshot
+once per batch, so a publish() between batches changes answers without a
+restart and without tearing a batch.
+
+Latency accounting is end-to-end per request (submit -> result ready);
+``stats()`` reports p50/p99 and docs/sec over the recorded window.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import queue
+import threading
+import time
+import traceback
+from typing import Any, Sequence
+
+import numpy as np
+import jax
+
+from repro.serve.infer import InferConfig, fold_in, pack_docs
+from repro.serve.snapshot import HotSwapModel
+
+_SENTINEL = object()
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    max_batch: int = 32
+    max_delay_ms: float = 3.0
+    length_buckets: tuple[int, ...] = (32, 64, 128, 256)
+    infer: InferConfig = InferConfig()
+
+    def batch_buckets(self) -> tuple[int, ...]:
+        b, out = 1, []
+        while b < self.max_batch:
+            out.append(b)
+            b *= 2
+        out.append(self.max_batch)
+        return tuple(out)
+
+
+def _bucket(value: int, buckets: Sequence[int]) -> int:
+    for b in buckets:
+        if value <= b:
+            return b
+    return buckets[-1]
+
+
+class _Request:
+    __slots__ = ("tokens", "event", "result", "t_submit")
+
+    def __init__(self, tokens: np.ndarray):
+        self.tokens = tokens
+        self.event = threading.Event()
+        self.result: dict[str, Any] | None = None
+        self.t_submit = time.perf_counter()
+
+
+class LDAServeEngine:
+    """Threaded micro-batching front end over ``fold_in``."""
+
+    def __init__(self, model: HotSwapModel, cfg: EngineConfig | None = None,
+                 seed: int = 0):
+        self.model = model
+        self.cfg = cfg or EngineConfig()
+        self._queue: queue.Queue = queue.Queue()
+        self._lock = threading.Lock()
+        # bounded windows: stats stay O(window), not O(lifetime)
+        self._latencies_ms: collections.deque = collections.deque(maxlen=4096)
+        self._batch_sizes: collections.deque = collections.deque(maxlen=4096)
+        self._docs_done = 0
+        self._errors = 0
+        self._t_first: float | None = None
+        self._t_last: float | None = None
+        self._rng = np.random.default_rng(seed)
+        self._worker = threading.Thread(target=self._run, daemon=True)
+        self._worker.start()
+
+    # -- client API ---------------------------------------------------------
+    def submit(self, tokens) -> _Request:
+        """Enqueue one document (1-D array of word ids); non-blocking.
+
+        Raises ValueError on out-of-vocabulary ids — XLA's gather would
+        silently clamp them to the last phi row and serve a wrong answer.
+        """
+        L_max = self.cfg.length_buckets[-1]
+        toks = np.asarray(tokens, np.int32).reshape(-1)[:L_max]
+        v = self.model.acquire()[1].num_words
+        if toks.size and (toks.min() < 0 or toks.max() >= v):
+            raise ValueError(f"word ids must be in [0, {v})")
+        req = _Request(toks)
+        self._queue.put(req)
+        return req
+
+    def infer(self, tokens, timeout: float | None = 30.0) -> dict[str, Any]:
+        """Blocking single-document inference."""
+        req = self.submit(tokens)
+        if not req.event.wait(timeout):
+            raise TimeoutError("inference request timed out")
+        assert req.result is not None
+        if "error" in req.result:
+            raise RuntimeError(req.result["error"])
+        return req.result
+
+    def infer_many(self, docs: Sequence, timeout: float | None = 60.0):
+        reqs = [self.submit(d) for d in docs]
+        for r in reqs:
+            if not r.event.wait(timeout):
+                raise TimeoutError("inference request timed out")
+            if "error" in r.result:
+                raise RuntimeError(r.result["error"])
+        return [r.result for r in reqs]
+
+    def stop(self):
+        self._queue.put(_SENTINEL)
+        self._worker.join(timeout=30)
+
+    # -- metrics ------------------------------------------------------------
+    def stats(self) -> dict[str, float]:
+        """Counters over the engine lifetime; percentiles over the last
+        <=4096 requests (the bounded recording window)."""
+        with self._lock:
+            lat = np.asarray(self._latencies_ms, np.float64)
+            n = self._docs_done
+            errors = self._errors
+            span = ((self._t_last or 0.0) - (self._t_first or 0.0))
+            mean_b = float(np.mean(self._batch_sizes)) if self._batch_sizes else 0.0
+            batches = len(self._batch_sizes)
+        return dict(
+            requests=float(n),
+            errors=float(errors),
+            batches=float(batches),
+            mean_batch=mean_b,
+            p50_ms=float(np.percentile(lat, 50)) if lat.size else 0.0,
+            p99_ms=float(np.percentile(lat, 99)) if lat.size else 0.0,
+            docs_per_sec=(n / span) if span > 0 else 0.0,
+        )
+
+    def jit_cache_size(self) -> int:
+        """Compiled-variant count of the fold-in kernel (bucketing check)."""
+        return fold_in._cache_size()
+
+    # -- worker -------------------------------------------------------------
+    def _collect(self) -> list[_Request] | None:
+        """One batch: block for the first request, then flush on size/timeout."""
+        first = self._queue.get()
+        if first is _SENTINEL:
+            return None
+        batch = [first]
+        deadline = time.perf_counter() + self.cfg.max_delay_ms / 1e3
+        while len(batch) < self.cfg.max_batch:
+            remaining = deadline - time.perf_counter()
+            if remaining <= 0:
+                break
+            try:
+                nxt = self._queue.get(timeout=remaining)
+            except queue.Empty:
+                break
+            if nxt is _SENTINEL:  # drain current batch, then shut down
+                self._queue.put(_SENTINEL)
+                break
+            batch.append(nxt)
+        return batch
+
+    def _fail(self, reqs: list[_Request], msg: str):
+        with self._lock:
+            self._errors += len(reqs)
+        for r in reqs:
+            r.result = dict(error=msg)
+            r.event.set()
+
+    def _run(self):
+        cfg = self.cfg
+        while True:
+            batch = self._collect()
+            if batch is None:
+                return
+            # A failed batch must never kill the worker: pending requests
+            # would hang and the queue would silently stop draining.
+            try:
+                self._serve_batch(batch)
+            except Exception as e:  # noqa: BLE001 — report to callers, keep serving
+                traceback.print_exc()
+                self._fail([r for r in batch if not r.event.is_set()],
+                           f"{type(e).__name__}: {e}")
+
+    def _serve_batch(self, batch: list[_Request]):
+        cfg = self.cfg
+        version, snap = self.model.acquire()
+        # Re-validate against the snapshot this batch will actually be
+        # served with: a hot-swap between submit() and here may have shrunk
+        # the vocabulary, and XLA's gather would silently clamp OOV ids.
+        ok, bad = [], []
+        for r in batch:
+            if r.tokens.size and int(r.tokens.max()) >= snap.num_words:
+                bad.append(r)
+            else:
+                ok.append(r)
+        if bad:
+            self._fail(bad, f"word ids must be in [0, {snap.num_words}) "
+                            "(vocabulary changed by hot-swap)")
+        if not ok:
+            return
+        batch = ok
+
+        B = _bucket(len(batch), cfg.batch_buckets())
+        L = _bucket(max(len(r.tokens) for r in batch), cfg.length_buckets)
+        docs = [r.tokens for r in batch]
+        docs += [np.zeros(0, np.int32)] * (B - len(batch))  # pad docs
+        tokens, mask = pack_docs(docs, L)
+
+        key = jax.random.key(int(self._rng.integers(2**31)))
+        res = fold_in(
+            snap.phi_vk, snap.phi_sum, tokens, mask, key,
+            snap.alpha, snap.beta,
+            num_words_total=snap.num_words_total,
+            burn_in=cfg.infer.burn_in, samples=cfg.infer.samples,
+            top_k=cfg.infer.top_k, ell_capacity=cfg.infer.ell_capacity)
+        theta = np.asarray(res.theta)
+        tt = np.asarray(res.top_topics)
+        tw = np.asarray(res.top_weights)
+
+        now = time.perf_counter()
+        with self._lock:
+            if self._t_first is None:
+                self._t_first = now
+            self._t_last = now
+            self._batch_sizes.append(len(batch))
+            for i, r in enumerate(batch):
+                r.result = dict(
+                    theta=theta[i], top_topics=tt[i], top_weights=tw[i],
+                    model_version=version,
+                    latency_ms=(now - r.t_submit) * 1e3,
+                )
+                self._latencies_ms.append(r.result["latency_ms"])
+                self._docs_done += 1
+        for r in batch:
+            r.event.set()

@@ -1,0 +1,177 @@
+"""Fold-in Gibbs inference for unseen documents (the serving hot path).
+
+Given a *frozen* topic-word model (phi_vk, phi_sum) from a snapshot, estimate
+the doc-topic mixture theta of documents the model never trained on: assign
+random topics, then run delayed-count Gibbs sweeps where only the document
+side moves — phi stays fixed, exactly the paper's delayed-count semantics
+applied across the train/serve boundary.
+
+The per-token distribution is the training sampler's Eq. 1 with frozen phi:
+
+    p(z = k | w, d) ∝ (theta_dk + alpha) * p*_w(k)
+                    =  theta_dk * p*_w(k)  +  alpha * p*_w(k)
+                       `-- p1: sparse -----'  `-- p2: dense --'
+
+and we keep the C4 S/Q split in inference: theta of a fresh doc has at most
+min(L, K) non-zero topics, so S is evaluated over an ELL top-P slice while
+the dense side reuses the two-level blocked search (C5).  p*_w(k) is gathered
+once per request token (C7 sub-expression reuse across every sweep).
+
+Shapes are static per (B, L) so the jit cache is keyed only by the engine's
+shape buckets; phi enters as an argument, so hot-swapping a same-shape
+snapshot never recompiles.  Working set is O(B*L*K) floats — the engine's
+buckets bound it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import sampler, updates
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class InferConfig:
+    """Fold-in schedule: ``burn_in`` discarded sweeps, then ``samples``
+    sweeps whose thetas are averaged (posterior-mean estimate)."""
+
+    burn_in: int = 8
+    samples: int = 4
+    top_k: int = 8
+    ell_capacity: int | None = None  # P; None -> min(L, K)
+
+
+class FoldInResult(NamedTuple):
+    theta: Array        # (B, K) float32 — normalized posterior-mean mixture
+    top_topics: Array   # (B, top_k) int32 — heaviest topics per doc
+    top_weights: Array  # (B, top_k) float32 — their theta mass
+    sparse_frac: Array  # () — fraction of draws taken on the sparse S side
+    mean_s_over_sq: Array  # () — mean S/(S+Q) over real tokens
+
+
+def _theta_counts(z: Array, mask: Array, num_topics: int) -> Array:
+    """(B, L) assignments -> (B, K) per-doc topic counts.
+
+    The training count-rebuild primitive with one "doc" per batch row."""
+    B = z.shape[0]
+    rows = jnp.broadcast_to(jnp.arange(B, dtype=jnp.int32)[:, None], z.shape)
+    return updates.theta_from_z(z, rows, mask, B, num_topics)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_words_total", "burn_in", "samples", "top_k",
+                     "ell_capacity"),
+)
+def fold_in(
+    phi_vk: Array,      # (V, K) int32 — frozen topic-word counts
+    phi_sum: Array,     # (K,) int32 — frozen per-topic totals
+    tokens: Array,      # (B, L) int32 word ids (anything under mask=False ok)
+    mask: Array,        # (B, L) bool — False on padding slots
+    key: Array,
+    alpha,              # traced scalars: a snapshot with different
+    beta,               # hyperparams hot-swaps without recompiling
+    *,
+    num_words_total: int,
+    burn_in: int = 8,
+    samples: int = 4,
+    top_k: int = 8,
+    ell_capacity: int | None = None,
+) -> FoldInResult:
+    """Estimate theta for a batch of unseen documents against frozen phi."""
+    B, L = tokens.shape
+    K = phi_sum.shape[0]
+    P = min(ell_capacity or L, L, K)
+    kk = min(top_k, K)
+
+    # C7: the Eq. 1 word factor, gathered once per request token and shared
+    # by every sweep (the training sampler's per-tile p*, per-token here).
+    pstar_tok = sampler.pstar(phi_vk[tokens], phi_sum, beta,
+                              num_words_total)            # (B, L, K)
+    Q = alpha * pstar_tok.sum(-1)                         # (B, L)
+    flat_pstar = pstar_tok.reshape(B * L, K)
+
+    def sweep(carry, key_i):
+        z, theta = carry  # delayed counts: whole sweep vs sweep-start theta
+        counts, topics = jax.lax.top_k(theta, P)          # (B, P) ELL slice
+        gat = jnp.broadcast_to(topics[:, None, :], (B, L, P))
+        p1 = counts[:, None, :].astype(jnp.float32) * jnp.take_along_axis(
+            pstar_tok, gat, axis=-1)                      # (B, L, P)
+        p1_cum = jnp.cumsum(p1, axis=-1)
+        S = p1_cum[..., -1]                               # (B, L)
+
+        u = jax.random.uniform(key_i, (B, L, 2), jnp.float32)
+        use_sparse = u[..., 0] * (S + Q) < S
+        # sparse draw over the P-entry ELL cumsum
+        t_sparse = (u[..., 1] * S)[..., None]
+        j = jnp.minimum((p1_cum <= t_sparse).sum(-1), P - 1)
+        k_sparse = jnp.take_along_axis(topics, j.reshape(B, L), axis=1)
+        # dense draw: the training sampler's two-level blocked search (C5)
+        k_dense = jax.vmap(sampler.blocked_search)(
+            flat_pstar, u[..., 1].reshape(B * L, 1))[:, 0].reshape(B, L)
+
+        z_new = jnp.where(use_sparse, k_sparse, k_dense).astype(jnp.int32)
+        z_new = jnp.where(mask, z_new, z)
+        theta_new = _theta_counts(z_new, mask, K)
+        sp = (use_sparse & mask).sum()
+        ssq = jnp.where(mask, S / jnp.maximum(S + Q, 1e-30), 0.0).sum()
+        return (z_new, theta_new), (theta_new, sp, ssq)
+
+    k_init, k_sweeps = jax.random.split(key)
+    z0 = jax.random.randint(k_init, (B, L), 0, K, jnp.int32)
+    carry = (z0, _theta_counts(z0, mask, K))
+    keys = jax.random.split(k_sweeps, burn_in + samples)
+    carry, _ = jax.lax.scan(sweep, carry, keys[:burn_in])
+    _, (thetas, sps, ssqs) = jax.lax.scan(sweep, carry, keys[burn_in:])
+
+    theta_mean = thetas.astype(jnp.float32).mean(0) + alpha  # (B, K)
+    theta_mean = theta_mean / theta_mean.sum(-1, keepdims=True)
+    tw, tt = jax.lax.top_k(theta_mean, kk)
+    n_real = jnp.maximum(mask.sum(), 1).astype(jnp.float32)
+    denom = n_real * samples
+    return FoldInResult(
+        theta=theta_mean,
+        top_topics=tt.astype(jnp.int32),
+        top_weights=tw,
+        sparse_frac=sps.sum() / denom,
+        mean_s_over_sq=ssqs.sum() / denom,
+    )
+
+
+def fold_in_config(snapshot, tokens, mask, key, cfg: InferConfig) -> FoldInResult:
+    """Convenience wrapper: run ``fold_in`` from a snapshot + InferConfig."""
+    return fold_in(
+        snapshot.phi_vk, snapshot.phi_sum, tokens, mask, key,
+        snapshot.alpha, snapshot.beta,
+        num_words_total=snapshot.num_words_total,
+        burn_in=cfg.burn_in, samples=cfg.samples, top_k=cfg.top_k,
+        ell_capacity=cfg.ell_capacity,
+    )
+
+
+def pack_docs(
+    docs: Sequence[np.ndarray],
+    length: int | None = None,
+) -> tuple[np.ndarray, np.ndarray]:
+    """List of per-doc word-id arrays -> padded (B, L) tokens + mask.
+
+    Docs longer than ``length`` are truncated (serving contract: the engine's
+    largest length bucket caps request size).
+    """
+    if length is None:
+        length = max((len(d) for d in docs), default=1)
+    B = len(docs)
+    tokens = np.zeros((B, length), np.int32)
+    mask = np.zeros((B, length), bool)
+    for i, d in enumerate(docs):
+        d = np.asarray(d, np.int32)[:length]
+        tokens[i, : len(d)] = d
+        mask[i, : len(d)] = True
+    return tokens, mask

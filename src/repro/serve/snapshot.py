@@ -1,0 +1,171 @@
+"""Frozen-model snapshots + hot-swap: the train/serve publication boundary.
+
+A training job's mutable state is z; what a *server* needs is the derived
+topic-word model: phi_vk (V, K), phi_sum (K,), the hyperparams that define
+Eq. 1, and optionally the vocabulary strings.  A snapshot freezes exactly
+that — it is to serving what the checkpoint's canonical z is to training.
+
+File format: one ``.npz`` (count arrays + vocab) written atomically
+(tmp + fsync + rename, same discipline as ``distributed.checkpoint``) with a
+sidecar-free embedded JSON meta entry, so a snapshot is always either absent
+or complete.
+
+Hot-swap (``HotSwapModel``): double-buffered publication.  The loader stages
+the incoming phi into the inactive buffer (device transfer happens *outside*
+the serving lock), then flips the active index — readers always see a fully
+materialized model, and in-flight batches keep the buffer they acquired.
+This is the paper's delayed-count semantics applied across processes: the
+server answers against iteration-N phi while iteration-N+1 trains.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+import threading
+import time
+from typing import Any, Sequence
+
+import numpy as np
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+_FORMAT_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSnapshot:
+    """Device-resident frozen model (everything Eq. 1 needs at serve time)."""
+
+    phi_vk: Array            # (V, K) int32 topic-word counts
+    phi_sum: Array           # (K,) int32 per-topic totals
+    alpha: float
+    beta: float
+    num_words_total: int     # Eq. 1's V (>= phi_vk rows under V-sharding)
+    meta: dict = dataclasses.field(default_factory=dict)
+    vocab: tuple[str, ...] | None = None
+
+    @property
+    def num_topics(self) -> int:
+        return int(self.phi_sum.shape[0])
+
+    @property
+    def num_words(self) -> int:
+        return int(self.phi_vk.shape[0])
+
+    def topic_words(self, k: int, n: int = 10) -> list[str]:
+        """Top-n vocabulary entries of topic k (debug/explain endpoint)."""
+        col = np.asarray(self.phi_vk)[:, k]
+        top = np.argsort(-col, kind="stable")[:n]
+        if self.vocab is None:
+            return [str(v) for v in top]
+        return [self.vocab[v] for v in top]
+
+
+def snapshot_from_state(
+    state,                       # LDAState (duck-typed: .phi_vk/.phi_sum/.iteration)
+    alpha: float,
+    beta: float,
+    num_words_total: int | None = None,
+    vocab: Sequence[str] | None = None,
+    meta: dict[str, Any] | None = None,
+) -> ModelSnapshot:
+    """Export the frozen serving model from a training state.
+
+    In 1D mode phi is fully replicated so any host's state.phi_vk is the
+    global model; in 2D mode callers pass the all-gathered phi.
+    """
+    m = dict(meta or {})
+    m.setdefault("iteration", int(np.asarray(state.iteration)))
+    m.setdefault("created_at", time.time())
+    return ModelSnapshot(
+        phi_vk=jnp.asarray(state.phi_vk, jnp.int32),
+        phi_sum=jnp.asarray(state.phi_sum, jnp.int32),
+        alpha=float(alpha),
+        beta=float(beta),
+        num_words_total=int(num_words_total or state.phi_vk.shape[0]),
+        meta=m,
+        vocab=tuple(vocab) if vocab is not None else None,
+    )
+
+
+def save_snapshot(path: str, snap: ModelSnapshot) -> str:
+    """Atomic write: a crash mid-save never leaves a truncated snapshot."""
+    payload = dict(
+        phi_vk=np.asarray(snap.phi_vk, np.int32),
+        phi_sum=np.asarray(snap.phi_sum, np.int32),
+        meta_json=np.frombuffer(json.dumps({
+            "version": _FORMAT_VERSION,
+            "alpha": snap.alpha,
+            "beta": snap.beta,
+            "num_words_total": snap.num_words_total,
+            "meta": snap.meta,
+        }).encode(), dtype=np.uint8),
+    )
+    if snap.vocab is not None:
+        payload["vocab"] = np.asarray(snap.vocab, dtype=np.str_)
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez_compressed(f, **payload)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    return path
+
+
+def load_snapshot(path: str) -> ModelSnapshot:
+    """Load a snapshot device-resident (jnp arrays)."""
+    with np.load(path, allow_pickle=False) as d:
+        meta = json.loads(bytes(d["meta_json"]).decode())
+        vocab = tuple(str(w) for w in d["vocab"]) if "vocab" in d else None
+        return ModelSnapshot(
+            phi_vk=jnp.asarray(d["phi_vk"], jnp.int32),
+            phi_sum=jnp.asarray(d["phi_sum"], jnp.int32),
+            alpha=float(meta["alpha"]),
+            beta=float(meta["beta"]),
+            num_words_total=int(meta["num_words_total"]),
+            meta=dict(meta.get("meta", {})),
+            vocab=vocab,
+        )
+
+
+class HotSwapModel:
+    """Double-buffered snapshot holder: publish() while serving continues.
+
+    Readers call ``acquire()`` and keep using the returned snapshot for the
+    whole batch even if a publish lands mid-flight; the next batch picks up
+    the new buffer.  Device staging (jnp.asarray in load/snapshot_from_state)
+    happens before the flip, so the critical section is a pointer swap.
+    """
+
+    def __init__(self, snap: ModelSnapshot):
+        self._buffers: list[ModelSnapshot | None] = [snap, None]
+        self._active = 0
+        self._version = 1
+        self._lock = threading.Lock()
+
+    @property
+    def version(self) -> int:
+        return self._version
+
+    def acquire(self) -> tuple[int, ModelSnapshot]:
+        with self._lock:
+            return self._version, self._buffers[self._active]
+
+    def publish(self, snap: ModelSnapshot) -> int:
+        """Stage into the inactive buffer, then flip.  Returns new version."""
+        staged = snap  # arrays already device-resident (constructor/load)
+        with self._lock:
+            inactive = 1 - self._active
+            self._buffers[inactive] = staged
+            self._active = inactive
+            self._version += 1
+            return self._version

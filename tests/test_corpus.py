@@ -1,7 +1,12 @@
 """Corpus layer: partition balance (C1), word-major tiling (C6), uid maps."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # property tests need hypothesis; the rest of the module does not
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core.corpus import (Corpus, ell_capacity, partition_by_document,
                                tile_corpus, tile_shard)
@@ -63,37 +68,41 @@ class TestTiling:
                                       tiny_corpus.doc_lengths())
 
 
-@given(
-    n_docs=st.integers(2, 12),
-    n_words=st.integers(2, 20),
-    n_tokens=st.integers(1, 300),
-    tile=st.sampled_from([4, 16, 64]),
-    shards=st.integers(1, 4),
-    seed=st.integers(0, 10_000),
-)
-@settings(max_examples=25, deadline=None)
-def test_tiling_roundtrip_property(n_docs, n_words, n_tokens, tile, shards, seed):
-    """Property: for any corpus, sharding+tiling preserves every token exactly
-    once with its correct (doc, word) pair."""
-    rng = np.random.default_rng(seed)
-    corpus = make_corpus(rng.integers(0, n_docs, n_tokens),
-                         rng.integers(0, n_words, n_tokens), n_docs, n_words)
-    shards_list = tile_corpus(corpus, shards, tile)
-    seen = []
-    for sh in shards_list:
-        uid = np.asarray(sh.token_uid)
-        m = np.asarray(sh.token_mask)
-        words = np.asarray(sh.tile_word)
-        dl = np.asarray(sh.doc_global)
-        docs_local = np.asarray(sh.token_doc)
-        for i in range(uid.shape[0]):
-            for j in range(uid.shape[1]):
-                if m[i, j]:
-                    tok = uid[i, j]
-                    seen.append(tok)
-                    assert corpus.word_ids[tok] == words[i]
-                    assert corpus.doc_ids[tok] == dl[docs_local[i, j]]
-    assert sorted(seen) == list(range(n_tokens))
+if HAVE_HYPOTHESIS:
+    @given(
+        n_docs=st.integers(2, 12),
+        n_words=st.integers(2, 20),
+        n_tokens=st.integers(1, 300),
+        tile=st.sampled_from([4, 16, 64]),
+        shards=st.integers(1, 4),
+        seed=st.integers(0, 10_000),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_tiling_roundtrip_property(n_docs, n_words, n_tokens, tile, shards, seed):
+        """Property: for any corpus, sharding+tiling preserves every token exactly
+        once with its correct (doc, word) pair."""
+        rng = np.random.default_rng(seed)
+        corpus = make_corpus(rng.integers(0, n_docs, n_tokens),
+                             rng.integers(0, n_words, n_tokens), n_docs, n_words)
+        shards_list = tile_corpus(corpus, shards, tile)
+        seen = []
+        for sh in shards_list:
+            uid = np.asarray(sh.token_uid)
+            m = np.asarray(sh.token_mask)
+            words = np.asarray(sh.tile_word)
+            dl = np.asarray(sh.doc_global)
+            docs_local = np.asarray(sh.token_doc)
+            for i in range(uid.shape[0]):
+                for j in range(uid.shape[1]):
+                    if m[i, j]:
+                        tok = uid[i, j]
+                        seen.append(tok)
+                        assert corpus.word_ids[tok] == words[i]
+                        assert corpus.doc_ids[tok] == dl[docs_local[i, j]]
+        assert sorted(seen) == list(range(n_tokens))
+else:
+    def test_tiling_roundtrip_property():
+        pytest.importorskip("hypothesis")
 
 
 def test_ell_capacity_bounds(tiny_corpus):
