@@ -1,19 +1,25 @@
-"""Serving path: fold-in latency/throughput vs batch size and K.
+"""Serving path: fold-in latency/throughput vs batch size, K, and impl.
 
-Two measurements per (B, K) point:
-  * ``foldin_*``  — the raw jitted fold-in kernel (per-batch wall time),
-    the serving analogue of the training sweep benchmark;
+Measurements per (B, K) point:
+  * ``foldin_<impl>_*`` — the raw jitted fold-in call for every ``impl``
+    (``xla``: the original scan; ``pallas``: the ``repro.kernels.fold_in``
+    kernel, interpret mode off-TPU; ``ref``: the kernel's jnp oracle), so
+    the kernel's speedup is *measured* per point, not asserted;
   * ``engine_*``  — end-to-end through the micro-batching engine (queueing,
     bucketing, host<->device transfers included), p50 per-request latency.
 
-Derived column: docs/sec for the kernel rows, p50 ms for the engine rows.
+Derived column: docs/s + tokens/s for the fold-in rows, p50 ms for the
+engine rows.  NOTE: off-TPU the pallas rows time the *interpreter* — they
+validate the path end to end; the on-chip win is a hardware number.
 """
 import numpy as np
 
 from .common import emit, timeit
 
+IMPLS = ("xla", "pallas", "ref")
 
-def run():
+
+def run(impls=IMPLS):
     import jax
     from repro.serve import (EngineConfig, HotSwapModel, InferConfig,
                              LDAServeEngine, ModelSnapshot)
@@ -36,14 +42,17 @@ def run():
             mask = np.ones((B, L), bool)
             key = jax.random.key(0)
 
-            def call(t=tokens, m=mask, s=snap):
-                return fold_in(
-                    s.phi_vk, s.phi_sum, t, m, key, s.alpha, s.beta,
-                    num_words_total=V, burn_in=infer.burn_in,
-                    samples=infer.samples, top_k=8)
+            for impl in impls:
+                def call(t=tokens, m=mask, s=snap, i=impl):
+                    return fold_in(
+                        s.phi_vk, s.phi_sum, t, m, key, s.alpha, s.beta,
+                        num_words_total=V, burn_in=infer.burn_in,
+                        samples=infer.samples, top_k=8, impl=i)
 
-            us = timeit(call, warmup=2, iters=3)
-            emit(f"foldin_K{K}_B{B}", us, f"{B / (us / 1e6):.0f} docs/s")
+                us = timeit(call, warmup=2, iters=3)
+                emit(f"foldin_{impl}_K{K}_B{B}", us,
+                     f"{B / (us / 1e6):.0f} docs/s "
+                     f"{B * L / (us / 1e6):.0f} tok/s")
 
         # end-to-end engine path at the largest batch point
         model = HotSwapModel(snap)
@@ -56,3 +65,22 @@ def run():
         emit(f"engine_K{K}", s["p50_ms"] * 1e3,
              f"p99={s['p99_ms']:.1f}ms {s['docs_per_sec']:.0f} docs/s")
         eng.stop()
+
+
+def main(argv=None) -> int:
+    """Standalone entry: ``python -m benchmarks.serving --impl pallas``."""
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--impl", nargs="+", choices=IMPLS, default=list(IMPLS),
+                    help="fold-in implementation(s) to time")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    run(impls=tuple(args.impl))
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main())

@@ -42,6 +42,7 @@ def main():
     model = HotSwapModel(snap)
     engine = LDAServeEngine(model, EngineConfig(
         max_batch=16, max_delay_ms=2.0, length_buckets=(32, 64, 128),
+        # impl="pallas" swaps in the fused repro.kernels.fold_in kernel
         infer=InferConfig(burn_in=6, samples=3, top_k=4)))
 
     unseen = lda_corpus(num_docs=24, num_words=300, num_topics=16,

@@ -54,6 +54,15 @@ def pstar(phi_col: Array, phi_sum: Array, beta: float, num_words_total: int) -> 
     )
 
 
+def pick_search_block(K: int) -> int:
+    """Level-1 block width of the two-level search: the TPU lane width when
+    it divides K, else the largest power of two that does.  Single source of
+    the policy — the fold-in kernel/oracle must pick the same width or their
+    draws diverge from this path.
+    """
+    return SEARCH_BLOCK if K % SEARCH_BLOCK == 0 else _pick_block(K)
+
+
 def blocked_search(pstar: Array, u: Array) -> Array:
     """C5: draw k ~ multinomial(pstar) via the two-level blocked search.
 
@@ -62,7 +71,7 @@ def blocked_search(pstar: Array, u: Array) -> Array:
     reuses it to draw from theta-weighted distributions.
     """
     K = pstar.shape[0]
-    B = SEARCH_BLOCK if K % SEARCH_BLOCK == 0 else _pick_block(K)
+    B = pick_search_block(K)
     nb = K // B
     blocks = pstar.reshape(nb, B)
     bsum = blocks.sum(axis=1)          # level-1 "index tree"

@@ -35,6 +35,24 @@ from repro.core.corpus import (
 
 Array = jnp.ndarray
 
+
+def shard_map_compat(f, *, mesh, in_specs, out_specs, check_vma=False):
+    """Version-tolerant ``shard_map``.
+
+    jax >= 0.6 exposes ``jax.shard_map`` (with the ``check_vma`` kwarg); the
+    pinned 0.4.x line only has ``jax.experimental.shard_map.shard_map``,
+    whose equivalent knob is named ``check_rep``.  Every call site in this
+    repo goes through here so the distributed path works on both.
+    """
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as legacy_shard_map
+    return legacy_shard_map(f, mesh=mesh, in_specs=in_specs,
+                            out_specs=out_specs, check_rep=check_vma)
+
+
 # array leaves that travel through shard_map (leading shard axis)
 _CORPUS_FIELDS = ("tile_word", "token_doc", "token_mask", "tile_first",
                   "doc_length", "doc_global", "token_uid")
@@ -242,7 +260,7 @@ class DistributedLDA:
                            d_ax),  # theta term: psum over doc shards only
                 model_axes=m_ax)
 
-        sm = lambda f, ins, outs: jax.jit(jax.shard_map(
+        sm = lambda f, ins, outs: jax.jit(shard_map_compat(
             f, mesh=mesh, in_specs=ins, out_specs=outs, check_vma=False))
         self._init_fn = sm(_init, (corpus_specs, repl), state_specs)
         self._rebuild_fn = sm(_rebuild, (corpus_specs, dev, repl), state_specs)
@@ -290,6 +308,41 @@ class DistributedLDA:
         meta.setdefault("fingerprint", ckpt.corpus_fingerprint(self.corpus))
         meta.setdefault("num_topics", self.cfg.num_topics)
         mgr.save(int(jax.device_get(state.iteration)), z_canon, meta)
+
+    # -- serving export -------------------------------------------------------
+    def gather_phi(self, state) -> np.ndarray:
+        """Canonical (V, K) phi from a state trained on THIS partition.
+
+        1D: phi is replicated — any replica IS the global model.  2D: the
+        state's phi_vk is the concatenation of the word shards (the all-gather
+        over the word axes that shard_map's out_spec performs), whose rows are
+        in (shard, LPT-local row) order — NOT canonical word order.  Exporting
+        that array directly would serve a silently permuted model, so we
+        un-permute through the partition plan's word maps (and drop the
+        padding rows of shards that got fewer than vocab_shard_size words).
+        """
+        phi = np.asarray(jax.device_get(state.phi_vk))
+        if self.plan.mode == "1d":
+            return phi
+        plan = self.plan
+        rows = (plan.word_shard_of.astype(np.int64) * plan.vocab_shard_size
+                + plan.word_local_id)
+        return phi[rows]
+
+    def publish_snapshot(self, mgr, state, vocab=None,
+                         meta: dict | None = None) -> str:
+        """Export the frozen serving model with the *canonical* phi.
+
+        This is the partition-aware counterpart of
+        ``CheckpointManager.publish_snapshot`` (which assumes a replicated
+        phi and would write a word-sharded, i.e. wrong, snapshot for a
+        2D-trained state)."""
+        state_c = state._replace(
+            phi_vk=jnp.asarray(self.gather_phi(state), jnp.int32))
+        return mgr.publish_snapshot(
+            state_c, self.cfg.resolved_alpha(), self.cfg.beta,
+            num_words_total=self.corpus.num_words, vocab=vocab,
+            meta=dict(meta or {}, mode=self._mode))
 
     # -- introspection for tests / roofline ---------------------------------
     def lower_step(self):

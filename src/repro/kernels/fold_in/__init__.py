@@ -1,0 +1,11 @@
+"""Serving fold-in kernel package (kernel.py / ref.py / ops.py).
+
+First *inference* kernel in the repo: the frozen-phi fold-in sweep of
+``repro.serve.infer`` with the whole sweep loop fused on-chip.  Same layout
+contract as ``repro.kernels.lda_sample`` — a Pallas kernel, a pure-jnp
+oracle it must match bit-for-bit, and a jit'd public wrapper with an
+``impl={"pallas","ref"}`` switch.
+"""
+from repro.kernels.fold_in.ops import fold_in_sweeps
+
+__all__ = ["fold_in_sweeps"]

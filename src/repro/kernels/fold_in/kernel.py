@@ -1,0 +1,212 @@
+"""Pallas TPU kernel: frozen-phi fold-in sweeps (serving hot path).
+
+One grid step = one request document.  The XLA fold-in path
+(``repro.serve.infer``) re-materializes the O(B*L*K) per-token p* product and
+the (B, L, P) sparse side from HBM on *every* sweep; here the whole sweep
+loop runs on-chip per doc:
+
+  * the (L, K) gathered p* rows (C7: one gather per request, done by the
+    wrapper in ``ops.py``) are DMA'd into VMEM once and reused by every
+    burn-in + sample sweep;
+  * the doc's (K,) theta counts live in registers/VMEM across sweeps — the
+    delayed-count carry never round-trips to HBM;
+  * the C4 S/Q split and the C5 two-level blocked search run exactly as in
+    the training kernel, over VMEM-resident block sums computed once.
+
+The ELL slice of theta (the XLA path's ``jax.lax.top_k``) is an iterative
+argmax selection loop — bit-identical to ``lax.top_k`` including tie order
+(largest value first, ties broken toward the lower topic id), and
+expressible without a sort.
+
+alpha/beta enter as a (1, 2) array, not as static closure constants, so a
+hot-swapped snapshot with different hyperparams never recompiles — the same
+contract as the XLA path, where they are traced scalars.
+
+Validated bit-exact vs ``ref.py`` (and vs the XLA serving path) in interpret
+mode on CPU; written against the TPU BlockSpec/VMEM model for real hardware
+(VMEM footprint per step: (L, K) f32 p* + (L, nb) block sums, ~1 MB at
+L=256, K=1024).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.sampler import pick_search_block
+
+_INT_MIN = jnp.iinfo(jnp.int32).min
+
+
+def _ell_topk(theta, P: int):
+    """(K,) counts -> (P,) descending (counts, topics), == ``lax.top_k``.
+
+    Selection loop: P rounds of (max, argmax, mask-out).  ``jnp.argmax``
+    returns the first maximal index, which reproduces top_k's tie order.
+    """
+    K = theta.shape[0]
+    k_iota = jax.lax.broadcasted_iota(jnp.int32, (1, K), 1)[0]
+    p_iota = jax.lax.broadcasted_iota(jnp.int32, (1, P), 1)[0]
+
+    def select(j, carry):
+        w, cnt, tpc = carry
+        v = jnp.max(w)
+        i = jnp.argmax(w).astype(jnp.int32)
+        cnt = jnp.where(p_iota == j, v, cnt)
+        tpc = jnp.where(p_iota == j, i, tpc)
+        w = jnp.where(k_iota == i, _INT_MIN, w)
+        return w, cnt, tpc
+
+    zero = jnp.zeros((P,), jnp.int32)
+    _, cnt, tpc = jax.lax.fori_loop(0, P, select, (theta, zero, zero))
+    return cnt, tpc
+
+
+def _kernel(
+    phi_tok_ref,     # (1, L, K) int32 — this doc's gathered phi rows (VMEM)
+    phi_sum_ref,     # (1, K) int32
+    hyper_ref,       # (1, 2) float32 — [alpha, beta], traced (no recompile)
+    uniforms_ref,    # (1, n_sweeps, L, 2) float32
+    mask_ref,        # (1, L) int32
+    z0_ref,          # (1, L) int32
+    theta_sum_ref,   # out (1, K) int32 — sum of theta over the sample sweeps
+    sp_ref,          # out (1, 1) int32 — sparse-side draws (sample sweeps)
+    ssq_ref,         # out (1, 1) float32 — sum of S/(S+Q) over real tokens
+    *,
+    num_words_total: int,
+    burn_in: int,
+    samples: int,
+    ell_capacity: int,
+):
+    L, K = phi_tok_ref.shape[1], phi_tok_ref.shape[2]
+    P = ell_capacity
+    B = pick_search_block(K)
+    nb = K // B
+
+    alpha = hyper_ref[0, 0]
+    beta = hyper_ref[0, 1]
+
+    # C7: per-token p* rows, computed once and VMEM-resident for all sweeps
+    pstar = (phi_tok_ref[0].astype(jnp.float32) + beta) / (
+        phi_sum_ref[0].astype(jnp.float32)[None, :]
+        + beta * num_words_total)                         # (L, K)
+    Q = alpha * pstar.sum(-1)                             # (L,)
+
+    # C5 level-1 "index tree" over p*, shared by every dense draw
+    blocks = pstar.reshape(L, nb, B)
+    bsum = blocks.sum(-1)                                 # (L, nb)
+    bcum = jnp.cumsum(bsum, axis=-1)
+    total = bcum[:, -1]
+
+    mask = mask_ref[0] != 0                               # (L,)
+    uni = uniforms_ref[0]                                 # (n_sweeps, L, 2)
+    k_iota = jax.lax.broadcasted_iota(jnp.int32, (1, K), 1)[0]
+
+    def theta_counts(z):
+        hits = (z[:, None] == k_iota[None, :]) & mask[:, None]
+        return hits.astype(jnp.int32).sum(0)              # (K,)
+
+    def sweep(s, carry):
+        z, theta, tsum, sp, ssq = carry
+        cnt, tpc = _ell_topk(theta, P)                    # (P,) ELL slice
+        # C4 sparse side: p1 over the doc's <=P live topics
+        p1 = cnt.astype(jnp.float32)[None, :] * jnp.take(pstar, tpc, axis=1)
+        p1_cum = jnp.cumsum(p1, axis=-1)                  # (L, P)
+        S = p1_cum[:, -1]
+
+        u = jax.lax.dynamic_index_in_dim(uni, s, 0, keepdims=False)  # (L, 2)
+        u1, u2 = u[:, 0], u[:, 1]
+        use_sparse = u1 * (S + Q) < S
+
+        # sparse draw: search the P-entry prefix sums
+        j = jnp.minimum(
+            (p1_cum <= (u2 * S)[:, None]).astype(jnp.int32).sum(-1), P - 1)
+        k_sparse = jnp.take(tpc, j)
+
+        # dense draw: two-level blocked search (C5)
+        target = u2 * total
+        b_idx = jnp.minimum(
+            (bcum <= target[:, None]).astype(jnp.int32).sum(-1), nb - 1)
+        prev = jnp.where(
+            b_idx > 0,
+            jnp.take_along_axis(bcum, jnp.maximum(b_idx - 1, 0)[:, None],
+                                axis=1)[:, 0],
+            0.0)
+        seg = jnp.take_along_axis(blocks, b_idx[:, None, None], axis=1)[:, 0]
+        seg_cum = jnp.cumsum(seg, axis=-1) + prev[:, None]
+        in_b = jnp.minimum(
+            (seg_cum <= target[:, None]).astype(jnp.int32).sum(-1), B - 1)
+        k_dense = b_idx * B + in_b
+
+        z_new = jnp.where(use_sparse, k_sparse, k_dense).astype(jnp.int32)
+        z_new = jnp.where(mask, z_new, z)
+        theta_new = theta_counts(z_new)
+
+        keep = (s >= burn_in).astype(jnp.int32)
+        tsum = tsum + keep * theta_new
+        sp = sp + keep * (use_sparse & mask).astype(jnp.int32).sum()
+        ssq = ssq + keep.astype(jnp.float32) * jnp.where(
+            mask, S / jnp.maximum(S + Q, 1e-30), 0.0).sum()
+        return z_new, theta_new, tsum, sp, ssq
+
+    z0 = z0_ref[0]
+    init = (z0, theta_counts(z0), jnp.zeros((K,), jnp.int32),
+            jnp.int32(0), jnp.float32(0))
+    _, _, tsum, sp, ssq = jax.lax.fori_loop(0, burn_in + samples, sweep, init)
+    theta_sum_ref[0, :] = tsum
+    sp_ref[0, 0] = sp
+    ssq_ref[0, 0] = ssq
+
+
+def fold_in_docs(
+    phi_tok,       # (B, L, K) int32 — pre-gathered phi rows (one gather, C7)
+    phi_sum,       # (K,) int32
+    hyper,         # (2,) float32 — [alpha, beta]
+    uniforms,      # (B, n_sweeps, L, 2) float32
+    mask,          # (B, L) int32
+    z0,            # (B, L) int32
+    *,
+    num_words_total: int,
+    burn_in: int,
+    samples: int,
+    ell_capacity: int,
+    interpret: bool = True,
+):
+    """pallas_call wrapper: grid over request docs, all sweeps fused on-chip.
+
+    Returns (theta_sum (B, K) int32, sparse_draws (B,) int32,
+    ssq_sum (B,) float32) — per-doc partials over the ``samples`` kept
+    sweeps; ``ops.py`` folds them into the ``FoldInResult`` contract.
+    """
+    nB, L, K = phi_tok.shape
+    n_sweeps = burn_in + samples
+
+    kern = functools.partial(
+        _kernel, num_words_total=num_words_total, burn_in=burn_in,
+        samples=samples, ell_capacity=ell_capacity)
+    theta_sum, sp, ssq = pl.pallas_call(
+        kern,
+        grid=(nB,),
+        in_specs=[
+            pl.BlockSpec((1, L, K), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, K), lambda i: (0, 0)),
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+            pl.BlockSpec((1, n_sweeps, L, 2), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, L), lambda i: (i, 0)),
+            pl.BlockSpec((1, L), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, K), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nB, K), jnp.int32),
+            jax.ShapeDtypeStruct((nB, 1), jnp.int32),
+            jax.ShapeDtypeStruct((nB, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(phi_tok, phi_sum.reshape(1, K), hyper.reshape(1, 2), uniforms, mask, z0)
+    return theta_sum, sp[:, 0], ssq[:, 0]

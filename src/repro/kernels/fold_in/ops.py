@@ -1,0 +1,59 @@
+"""Public wrapper for the fold-in kernel.
+
+Adapts the serving data model (word-id batches, one PRNG key, traced
+hyperparams) to the kernel's layout: the phi rows of every request token are
+gathered **once** here (C7 — the kernel then reuses them across all sweeps),
+the per-sweep uniforms and initial assignments are drawn exactly as the XLA
+path in ``repro.serve.infer`` draws them (same key splits, so all three
+impls are draw-identical), and alpha/beta travel as a (2,) array so a
+hot-swapped snapshot never recompiles.
+
+Called from inside ``repro.serve.infer.fold_in``'s jit; not jitted itself.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+
+def fold_in_sweeps(
+    phi_vk,        # (V, K) int32 — frozen topic-word counts
+    phi_sum,       # (K,) int32
+    tokens,        # (B, L) int32 word ids
+    mask,          # (B, L) bool
+    key,
+    alpha,         # traced scalars (hot-swap without recompiling)
+    beta,
+    *,
+    num_words_total: int,
+    burn_in: int,
+    samples: int,
+    ell_capacity: int,
+    impl: str = "pallas",
+    interpret: bool = True,
+):
+    """Run all fold-in sweeps; returns per-doc partials over the kept sweeps:
+    (theta_sum (B, K) int32, sparse_draws (B,) int32, ssq_sum (B,) float32).
+    """
+    B, L = tokens.shape
+    K = phi_sum.shape[0]
+
+    # identical randomness to the XLA path: same split tree, same draws
+    k_init, k_sweeps = jax.random.split(key)
+    z0 = jax.random.randint(k_init, (B, L), 0, K, jnp.int32)
+    keys = jax.random.split(k_sweeps, burn_in + samples)
+    uniforms = jax.vmap(
+        lambda k: jax.random.uniform(k, (B, L, 2), jnp.float32))(keys)
+    uniforms = jnp.swapaxes(uniforms, 0, 1)               # (B, n_sweeps, L, 2)
+
+    phi_tok = phi_vk.astype(jnp.int32)[tokens]            # (B, L, K), once
+    hyper = jnp.stack([jnp.float32(alpha), jnp.float32(beta)])
+    args = (phi_tok, phi_sum.astype(jnp.int32), hyper, uniforms,
+            mask.astype(jnp.int32), z0)
+    kw = dict(num_words_total=num_words_total, burn_in=burn_in,
+              samples=samples, ell_capacity=ell_capacity)
+    if impl == "pallas":
+        return kernel.fold_in_docs(*args, interpret=interpret, **kw)
+    return ref.fold_in_docs_ref(*args, **kw)

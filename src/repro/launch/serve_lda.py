@@ -41,6 +41,11 @@ def build_argparser() -> argparse.ArgumentParser:
     ap.add_argument("--burn-in", type=int, default=8)
     ap.add_argument("--samples", type=int, default=4)
     ap.add_argument("--top-k", type=int, default=8)
+    ap.add_argument("--impl", choices=("xla", "pallas", "ref"), default="xla",
+                    help="fold-in implementation: pure-XLA scan, the Pallas "
+                         "kernel (repro.kernels.fold_in; interpret mode on "
+                         "CPU), or the kernel's jnp oracle — all "
+                         "draw-identical")
     # bench-mode training knobs
     ap.add_argument("--topics", type=int, default=32)
     ap.add_argument("--train-iters", type=int, default=25)
@@ -57,7 +62,7 @@ def make_engine(args, snap):
         max_batch=args.max_batch, max_delay_ms=args.delay_ms,
         length_buckets=tuple(args.length_buckets),
         infer=InferConfig(burn_in=args.burn_in, samples=args.samples,
-                          top_k=args.top_k))
+                          top_k=args.top_k, impl=args.impl))
     return model, LDAServeEngine(model, cfg, seed=args.seed)
 
 
@@ -113,6 +118,7 @@ def run_bench(args) -> int:
     docs = docs_from_corpus(req_corpus)
 
     model, engine = make_engine(args, snap)
+    print(f"[bench] fold-in impl: {args.impl}")
     engine.infer(docs[0])  # warm the bucket compiles outside the timed storm
     results = engine.infer_many(docs)
     stats = engine.stats()

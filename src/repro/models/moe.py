@@ -102,6 +102,8 @@ def moe_ffn_ep(p: MoEParams, cfg: ModelConfig, x: Array,
     import numpy as np
     from jax.sharding import PartitionSpec as P
 
+    from repro.distributed.partition import shard_map_compat
+
     dp = policy.batch()
     tp = policy.tp
     fs = policy._fs()
@@ -145,7 +147,7 @@ def moe_ffn_ep(p: MoEParams, cfg: ModelConfig, x: Array,
         yk = yk * (keep[:, None] * gate_vals.reshape(T * K)[:, None]).astype(xl.dtype)
         return yk.reshape(T, K, D).sum(1).reshape(Bl, Sl, D)
 
-    fn = jax.shard_map(
+    fn = shard_map_compat(
         local_moe, mesh=mesh,
         in_specs=(P(dp, seq, None), P(None, None),
                   P(tp, fs, None), P(tp, fs, None), P(tp, None, fs)),

@@ -226,7 +226,8 @@ class LDAServeEngine:
             snap.alpha, snap.beta,
             num_words_total=snap.num_words_total,
             burn_in=cfg.infer.burn_in, samples=cfg.infer.samples,
-            top_k=cfg.infer.top_k, ell_capacity=cfg.infer.ell_capacity)
+            top_k=cfg.infer.top_k, ell_capacity=cfg.infer.ell_capacity,
+            impl=cfg.infer.impl)
         theta = np.asarray(res.theta)
         tt = np.asarray(res.top_topics)
         tw = np.asarray(res.top_weights)

@@ -21,6 +21,16 @@ Shapes are static per (B, L) so the jit cache is keyed only by the engine's
 shape buckets; phi enters as an argument, so hot-swapping a same-shape
 snapshot never recompiles.  Working set is O(B*L*K) floats — the engine's
 buckets bound it.
+
+Three interchangeable implementations behind ``impl`` (all draw-identical
+given the same key — same split tree, same uniforms):
+
+* ``"xla"``    — the original pure-XLA scan below (re-materializes the
+  per-sweep intermediates each sweep);
+* ``"pallas"`` — ``repro.kernels.fold_in``: one grid step per doc, theta
+  counts + gathered p* rows + the S/Q block sums stay on-chip across all
+  sweeps (interpret mode on CPU);
+* ``"ref"``    — the kernel's pure-jnp oracle, for parity testing.
 """
 from __future__ import annotations
 
@@ -46,6 +56,7 @@ class InferConfig:
     samples: int = 4
     top_k: int = 8
     ell_capacity: int | None = None  # P; None -> min(L, K)
+    impl: str = "xla"                # "xla" | "pallas" | "ref"
 
 
 class FoldInResult(NamedTuple):
@@ -68,7 +79,7 @@ def _theta_counts(z: Array, mask: Array, num_topics: int) -> Array:
 @functools.partial(
     jax.jit,
     static_argnames=("num_words_total", "burn_in", "samples", "top_k",
-                     "ell_capacity"),
+                     "ell_capacity", "impl", "interpret"),
 )
 def fold_in(
     phi_vk: Array,      # (V, K) int32 — frozen topic-word counts
@@ -84,12 +95,34 @@ def fold_in(
     samples: int = 4,
     top_k: int = 8,
     ell_capacity: int | None = None,
+    impl: str = "xla",
+    interpret: bool | None = None,
 ) -> FoldInResult:
-    """Estimate theta for a batch of unseen documents against frozen phi."""
+    """Estimate theta for a batch of unseen documents against frozen phi.
+
+    ``interpret=None`` resolves by backend: the Pallas kernel compiles on
+    TPU and falls back to the interpreter everywhere else.
+    """
     B, L = tokens.shape
     K = phi_sum.shape[0]
     P = min(ell_capacity or L, L, K)
     kk = min(top_k, K)
+    n_real = jnp.maximum(mask.sum(), 1).astype(jnp.float32)
+    denom = n_real * samples
+
+    if impl != "xla":
+        # kernel path (repro.kernels.fold_in): all sweeps fused on-chip,
+        # per-doc partials back; draw-identical to the scan below.
+        from repro.kernels.fold_in import ops as foldin_ops
+
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        tsum, sps, ssqs = foldin_ops.fold_in_sweeps(
+            phi_vk, phi_sum, tokens, mask, key, alpha, beta,
+            num_words_total=num_words_total, burn_in=burn_in,
+            samples=samples, ell_capacity=P, impl=impl, interpret=interpret)
+        return _assemble(tsum, sps.sum(), ssqs.sum(), alpha, samples, kk,
+                         denom)
 
     # C7: the Eq. 1 word factor, gathered once per request token and shared
     # by every sweep (the training sampler's per-tile p*, per-token here).
@@ -130,18 +163,23 @@ def fold_in(
     keys = jax.random.split(k_sweeps, burn_in + samples)
     carry, _ = jax.lax.scan(sweep, carry, keys[:burn_in])
     _, (thetas, sps, ssqs) = jax.lax.scan(sweep, carry, keys[burn_in:])
+    return _assemble(thetas.sum(0), sps.sum(), ssqs.sum(), alpha, samples,
+                     kk, denom)
 
-    theta_mean = thetas.astype(jnp.float32).mean(0) + alpha  # (B, K)
+
+def _assemble(theta_sum, sp_total, ssq_total, alpha, samples: int, kk: int,
+              denom) -> FoldInResult:
+    """Sweep partials -> FoldInResult; shared by every impl so the contract
+    (posterior-mean smoothing, normalization, top-k) cannot diverge."""
+    theta_mean = theta_sum.astype(jnp.float32) / samples + alpha   # (B, K)
     theta_mean = theta_mean / theta_mean.sum(-1, keepdims=True)
     tw, tt = jax.lax.top_k(theta_mean, kk)
-    n_real = jnp.maximum(mask.sum(), 1).astype(jnp.float32)
-    denom = n_real * samples
     return FoldInResult(
         theta=theta_mean,
         top_topics=tt.astype(jnp.int32),
         top_weights=tw,
-        sparse_frac=sps.sum() / denom,
-        mean_s_over_sq=ssqs.sum() / denom,
+        sparse_frac=sp_total / denom,
+        mean_s_over_sq=ssq_total / denom,
     )
 
 
@@ -152,7 +190,7 @@ def fold_in_config(snapshot, tokens, mask, key, cfg: InferConfig) -> FoldInResul
         snapshot.alpha, snapshot.beta,
         num_words_total=snapshot.num_words_total,
         burn_in=cfg.burn_in, samples=cfg.samples, top_k=cfg.top_k,
-        ell_capacity=cfg.ell_capacity,
+        ell_capacity=cfg.ell_capacity, impl=cfg.impl,
     )
 
 

@@ -75,7 +75,10 @@ def snapshot_from_state(
     """Export the frozen serving model from a training state.
 
     In 1D mode phi is fully replicated so any host's state.phi_vk is the
-    global model; in 2D mode callers pass the all-gathered phi.
+    global model.  A 2D-trained state's phi_vk is word-sharded in
+    (shard, local row) order — exporting it directly would be silently
+    wrong; go through ``DistributedLDA.publish_snapshot``, which gathers
+    and un-permutes phi into canonical word order first.
     """
     m = dict(meta or {})
     m.setdefault("iteration", int(np.asarray(state.iteration)))
