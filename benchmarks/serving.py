@@ -1,16 +1,23 @@
-"""Serving path: fold-in latency/throughput vs batch size, K, and impl.
+"""Serving path: fold-in latency/throughput vs batch size, K, impl, and
+phi sharding.
 
 Measurements per (B, K) point:
   * ``foldin_<impl>_*`` — the raw jitted fold-in call for every ``impl``
     (``xla``: the original scan; ``pallas``: the ``repro.kernels.fold_in``
     kernel, interpret mode off-TPU; ``ref``: the kernel's jnp oracle), so
     the kernel's speedup is *measured* per point, not asserted;
+  * ``foldin_shard*`` — the same call against a **V-sharded** snapshot
+    (phi split over a mesh axis, per-token gather on the owning shard +
+    psum), the single-device vs sharded comparison of ISSUE 3;
   * ``engine_*``  — end-to-end through the micro-batching engine (queueing,
-    bucketing, host<->device transfers included), p50 per-request latency.
+    bucketing, the one-buffer H2D transfer included), p50 per-request
+    latency; the sharded engine row also *asserts* the one-H2D-per-batch
+    contract via the engine's transfer counter.
 
 Derived column: docs/s + tokens/s for the fold-in rows, p50 ms for the
-engine rows.  NOTE: off-TPU the pallas rows time the *interpreter* — they
-validate the path end to end; the on-chip win is a hardware number.
+engine rows.  NOTE: off-TPU the pallas rows time the *interpreter* and the
+sharded rows time host-platform devices — they validate the paths end to
+end; the on-chip win is a hardware number.
 """
 import numpy as np
 
@@ -19,15 +26,35 @@ from .common import emit, timeit
 IMPLS = ("xla", "pallas", "ref")
 
 
+def _engine_storm(snap, infer_cfg, L, rng, tag, check_h2d=False):
+    from repro.serve import EngineConfig, HotSwapModel, LDAServeEngine
+
+    V = snap.num_words
+    model = HotSwapModel(snap)
+    eng = LDAServeEngine(model, EngineConfig(
+        max_batch=32, max_delay_ms=2.0, length_buckets=(L,), infer=infer_cfg))
+    docs = [rng.integers(0, V, L).astype(np.int32) for _ in range(64)]
+    eng.infer(docs[0])  # warm compile
+    eng.infer_many(docs)
+    s = eng.stats()
+    if check_h2d:
+        # the packed-buffer contract: exactly one H2D transfer per batch
+        assert s["h2d_transfers"] == s["batches"], s
+    emit(tag, s["p50_ms"] * 1e3,
+         f"p99={s['p99_ms']:.1f}ms {s['docs_per_sec']:.0f} docs/s "
+         f"h2d/batch={s['h2d_transfers'] / max(s['batches'], 1):.0f}")
+    eng.stop()
+
+
 def run(impls=IMPLS):
     import jax
-    from repro.serve import (EngineConfig, HotSwapModel, InferConfig,
-                             LDAServeEngine, ModelSnapshot)
-    from repro.serve.infer import fold_in
+    from repro.serve import ModelSnapshot, shard_snapshot
+    from repro.serve.infer import InferConfig, fold_in, fold_in_sharded
 
     V, L = 2000, 64
     rng = np.random.default_rng(0)
     infer = InferConfig(burn_in=6, samples=3)
+    n_shards = min(jax.local_device_count(), 4)
 
     for K in (64, 256):
         # synthetic frozen model with a plausible count profile
@@ -36,6 +63,7 @@ def run(impls=IMPLS):
             phi_vk=jax.numpy.asarray(phi),
             phi_sum=jax.numpy.asarray(phi.sum(0)),
             alpha=50.0 / K, beta=0.01, num_words_total=V)
+        sharded = shard_snapshot(snap, n_shards)
 
         for B in (1, 8, 32):
             tokens = rng.integers(0, V, (B, L)).astype(np.int32)
@@ -54,17 +82,20 @@ def run(impls=IMPLS):
                      f"{B / (us / 1e6):.0f} docs/s "
                      f"{B * L / (us / 1e6):.0f} tok/s")
 
-        # end-to-end engine path at the largest batch point
-        model = HotSwapModel(snap)
-        eng = LDAServeEngine(model, EngineConfig(
-            max_batch=32, max_delay_ms=2.0, length_buckets=(L,), infer=infer))
-        docs = [rng.integers(0, V, L).astype(np.int32) for _ in range(64)]
-        eng.infer(docs[0])  # warm compile
-        eng.infer_many(docs)
-        s = eng.stats()
-        emit(f"engine_K{K}", s["p50_ms"] * 1e3,
-             f"p99={s['p99_ms']:.1f}ms {s['docs_per_sec']:.0f} docs/s")
-        eng.stop()
+            # the V-sharded gather (local gather + psum) on the same point
+            def call_sh(t=tokens, m=mask):
+                return fold_in_sharded(sharded, t, m, key, infer)
+
+            us = timeit(call_sh, warmup=2, iters=3)
+            emit(f"foldin_shard{n_shards}_K{K}_B{B}", us,
+                 f"{B / (us / 1e6):.0f} docs/s "
+                 f"{B * L / (us / 1e6):.0f} tok/s")
+
+        # end-to-end engine path at the largest batch point, both layouts;
+        # the sharded row doubles as the one-H2D-per-batch probe
+        _engine_storm(snap, infer, L, rng, f"engine_K{K}", check_h2d=True)
+        _engine_storm(sharded, infer, L, rng,
+                      f"engine_shard{n_shards}_K{K}", check_h2d=True)
 
 
 def main(argv=None) -> int:

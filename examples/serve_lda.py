@@ -70,6 +70,23 @@ def main():
                              InferConfig(burn_in=8, samples=4))
     print(f"held-out perplexity: {ppl.perplexity:.1f} "
           f"({ppl.num_tokens} completion tokens)")
+
+    # 6. V-sharded serving: publish phi split into word shards (one block
+    # per mesh device — the layout for models too big for one device) and
+    # hot-swap it in; draws are bit-identical to the dense layout
+    import jax
+    from repro.serve import load_any_snapshot
+    shards = min(jax.local_device_count(), 2)
+    path3 = mgr.publish_snapshot(res2.state, cfg.resolved_alpha(), cfg.beta,
+                                 num_words_total=corpus.num_words,
+                                 shards=shards)
+    v = model.publish(load_any_snapshot(path3))
+    r3 = engine.infer(docs[0])
+    layout = (f"{shards}-way V-sharded" if shards > 1
+              else "dense (1 device; try XLA_FLAGS="
+                   "--xla_force_host_platform_device_count=2)")
+    print(f"hot-swapped to v{v} ({layout} snapshot at {path3}); "
+          f"doc 0 served by model v{r3['model_version']}")
     engine.stop()
 
 

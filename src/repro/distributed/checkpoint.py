@@ -149,26 +149,67 @@ class CheckpointManager:
     # -- serving snapshots ----------------------------------------------------
     # Checkpoints restore *training* (z); snapshots publish the derived
     # frozen model (phi + hyperparams) to the serving side (repro.serve).
+    # Two layouts: dense `.npz` files and V-sharded `.sharded` directories
+    # (per-shard blocks + manifest); listing/pruning treats them uniformly.
     def publish_snapshot(self, state, alpha: float, beta: float,
                          num_words_total: int | None = None,
-                         vocab=None, meta: dict | None = None) -> str:
+                         vocab=None, meta: dict | None = None,
+                         shards: int | None = None) -> str:
         from repro.serve import snapshot as snap_mod
 
         it = int(jax.device_get(state.iteration))
         snap = snap_mod.snapshot_from_state(
             state, alpha=alpha, beta=beta, num_words_total=num_words_total,
             vocab=vocab, meta=dict(meta or {}, iteration=it))
-        path = os.path.join(self.dir, f"snapshot_{it:08d}.npz")
-        out = snap_mod.save_snapshot(path, snap)
-        # same keep-N pruning as checkpoints: a publish-every-eval training
-        # loop must not accumulate one full phi matrix per eval
-        snaps = sorted(fn for fn in os.listdir(self.dir)
-                       if fn.startswith("snapshot_") and fn.endswith(".npz"))
-        for fn in snaps[: -self.keep]:
-            os.unlink(os.path.join(self.dir, fn))
+        if shards and shards > 1:
+            path = os.path.join(self.dir,
+                                f"snapshot_{it:08d}{snap_mod.SHARDED_SUFFIX}")
+            out = snap_mod.save_sharded_snapshot(path, snap, shards)
+        else:
+            path = os.path.join(self.dir, f"snapshot_{it:08d}.npz")
+            out = snap_mod.save_snapshot(path, snap)
+        self._prune_snapshots()
         return out
 
+    def publish_sharded(self, iteration: int, blocks, phi_sum, shard_of,
+                        local_id, *, alpha: float, beta: float,
+                        num_words_total: int, meta: dict | None = None,
+                        vocab=None) -> str:
+        """Write pre-sharded phi blocks (e.g. a 2D trainer's per-device
+        word shards) as a serving snapshot, no dense phi anywhere."""
+        from repro.serve import snapshot as snap_mod
+
+        meta = dict(meta or {}, iteration=int(iteration))
+        path = os.path.join(
+            self.dir, f"snapshot_{iteration:08d}{snap_mod.SHARDED_SUFFIX}")
+        out = snap_mod.write_sharded_snapshot(
+            path, blocks, phi_sum, shard_of, local_id, alpha=alpha,
+            beta=beta, num_words_total=num_words_total, meta=meta,
+            vocab=vocab)
+        self._prune_snapshots()
+        return out
+
+    def _snapshot_names(self) -> list[str]:
+        from repro.serve.snapshot import SHARDED_SUFFIX
+
+        names = [fn for fn in os.listdir(self.dir)
+                 if fn.startswith("snapshot_")
+                 and (fn.endswith(".npz") or fn.endswith(SHARDED_SUFFIX))]
+        # iteration first, publish time second: re-publishing the same
+        # iteration in another layout must win "latest", not lose on a
+        # lexical .npz-vs-.sharded tie
+        return sorted(names, key=lambda fn: (
+            int(fn[9:17]), os.stat(os.path.join(self.dir, fn)).st_mtime_ns))
+
+    def _prune_snapshots(self):
+        # same keep-N pruning as checkpoints: a publish-every-eval training
+        # loop must not accumulate one full phi matrix per eval
+        import shutil
+
+        for fn in self._snapshot_names()[: -self.keep]:
+            p = os.path.join(self.dir, fn)
+            shutil.rmtree(p) if os.path.isdir(p) else os.unlink(p)
+
     def latest_snapshot_path(self) -> str | None:
-        snaps = sorted(fn for fn in os.listdir(self.dir)
-                       if fn.startswith("snapshot_") and fn.endswith(".npz"))
+        snaps = self._snapshot_names()
         return os.path.join(self.dir, snaps[-1]) if snaps else None

@@ -329,20 +329,64 @@ class DistributedLDA:
                 + plan.word_local_id)
         return phi[rows]
 
+    def _local_word_blocks(self, state) -> list[np.ndarray]:
+        """Per-word-shard phi blocks straight off their devices (2D mode).
+
+        ``state.phi_vk`` is word-sharded (replicated over the doc axes); we
+        read one addressable shard per word-shard index, so the full (V, K)
+        phi is never materialized in one buffer — the point of publishing a
+        sharded snapshot from a model too big for one device."""
+        v_local = self.plan.vocab_shard_size
+        blocks: dict[int, np.ndarray] = {}
+        for sh in state.phi_vk.addressable_shards:
+            ws = (sh.index[0].start or 0) // v_local
+            if ws not in blocks:
+                blocks[ws] = np.asarray(sh.data)
+        assert len(blocks) == self.plan.num_word_shards
+        return [blocks[i] for i in range(self.plan.num_word_shards)]
+
     def publish_snapshot(self, mgr, state, vocab=None,
-                         meta: dict | None = None) -> str:
+                         meta: dict | None = None,
+                         shards: int | None = None) -> str:
         """Export the frozen serving model with the *canonical* phi.
 
         This is the partition-aware counterpart of
         ``CheckpointManager.publish_snapshot`` (which assumes a replicated
         phi and would write a word-sharded, i.e. wrong, snapshot for a
-        2D-trained state)."""
-        state_c = state._replace(
-            phi_vk=jnp.asarray(self.gather_phi(state), jnp.int32))
-        return mgr.publish_snapshot(
-            state_c, self.cfg.resolved_alpha(), self.cfg.beta,
-            num_words_total=self.corpus.num_words, vocab=vocab,
-            meta=dict(meta or {}, mode=self._mode))
+        2D-trained state).
+
+        ``shards``: emit the V-sharded serving layout instead of one dense
+        ``.npz``.  When the training partition is 2D and ``shards`` equals
+        its word-shard count, each device's local phi block is written
+        directly under the trainer's LPT word maps — no full-phi gather
+        anywhere.  Any other shard count falls back to gather + contiguous
+        re-split."""
+        from repro.serve import snapshot as snap_mod
+
+        alpha, beta = self.cfg.resolved_alpha(), self.cfg.beta
+        meta_full = dict(meta or {}, mode=self._mode)
+        if not shards or shards <= 1:
+            state_c = state._replace(
+                phi_vk=jnp.asarray(self.gather_phi(state), jnp.int32))
+            return mgr.publish_snapshot(
+                state_c, alpha, beta,
+                num_words_total=self.corpus.num_words, vocab=vocab,
+                meta=meta_full)
+
+        plan = self.plan
+        if self._mode == "2d" and shards == plan.num_word_shards:
+            blocks = self._local_word_blocks(state)
+            shard_of, local_id = plan.word_shard_of, plan.word_local_id
+            meta_full["layout"] = "lpt"
+        else:
+            blocks, shard_of, local_id = snap_mod.split_dense_phi(
+                self.gather_phi(state), shards)
+            meta_full["layout"] = "contiguous"
+        return mgr.publish_sharded(
+            int(jax.device_get(state.iteration)), blocks,
+            np.asarray(jax.device_get(state.phi_sum)), shard_of, local_id,
+            alpha=alpha, beta=beta, num_words_total=self.corpus.num_words,
+            meta=meta_full, vocab=vocab)
 
     # -- introspection for tests / roofline ---------------------------------
     def lower_step(self):

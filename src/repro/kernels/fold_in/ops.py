@@ -1,14 +1,19 @@
 """Public wrapper for the fold-in kernel.
 
-Adapts the serving data model (word-id batches, one PRNG key, traced
-hyperparams) to the kernel's layout: the phi rows of every request token are
-gathered **once** here (C7 — the kernel then reuses them across all sweeps),
-the per-sweep uniforms and initial assignments are drawn exactly as the XLA
-path in ``repro.serve.infer`` draws them (same key splits, so all three
-impls are draw-identical), and alpha/beta travel as a (2,) array so a
-hot-swapped snapshot never recompiles.
+Adapts the serving data model (pre-gathered phi rows, one PRNG key, traced
+hyperparams) to the kernel's layout: the caller gathers the phi rows of
+every request token **once** (C7 — the kernel then reuses them across all
+sweeps), the per-sweep uniforms and initial assignments are drawn exactly
+as the XLA path in ``repro.serve.infer`` draws them (same key splits, so
+all three impls are draw-identical), and alpha/beta travel as a (2,) array
+so a hot-swapped snapshot never recompiles.
 
-Called from inside ``repro.serve.infer.fold_in``'s jit; not jitted itself.
+Taking the gathered rows (not the full phi) is what makes the kernel
+partition-agnostic: under V-sharded serving each device holds only its
+local phi block, the per-token gather runs on the shard owning each word
+id, and the psum'd (B, L, K) rows are all the kernel ever sees.
+
+Called from inside ``repro.serve.infer``'s jits; not jitted itself.
 """
 from __future__ import annotations
 
@@ -19,9 +24,8 @@ from . import kernel, ref
 
 
 def fold_in_sweeps(
-    phi_vk,        # (V, K) int32 — frozen topic-word counts
+    phi_tok,       # (B, L, K) int32 — gathered phi rows of the request tokens
     phi_sum,       # (K,) int32
-    tokens,        # (B, L) int32 word ids
     mask,          # (B, L) bool
     key,
     alpha,         # traced scalars (hot-swap without recompiling)
@@ -37,7 +41,7 @@ def fold_in_sweeps(
     """Run all fold-in sweeps; returns per-doc partials over the kept sweeps:
     (theta_sum (B, K) int32, sparse_draws (B,) int32, ssq_sum (B,) float32).
     """
-    B, L = tokens.shape
+    B, L = mask.shape
     K = phi_sum.shape[0]
 
     # identical randomness to the XLA path: same split tree, same draws
@@ -48,7 +52,7 @@ def fold_in_sweeps(
         lambda k: jax.random.uniform(k, (B, L, 2), jnp.float32))(keys)
     uniforms = jnp.swapaxes(uniforms, 0, 1)               # (B, n_sweeps, L, 2)
 
-    phi_tok = phi_vk.astype(jnp.int32)[tokens]            # (B, L, K), once
+    phi_tok = phi_tok.astype(jnp.int32)
     hyper = jnp.stack([jnp.float32(alpha), jnp.float32(beta)])
     args = (phi_tok, phi_sum.astype(jnp.int32), hyper, uniforms,
             mask.astype(jnp.int32), z0)

@@ -46,12 +46,26 @@ def build_argparser() -> argparse.ArgumentParser:
                          "kernel (repro.kernels.fold_in; interpret mode on "
                          "CPU), or the kernel's jnp oracle — all "
                          "draw-identical")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="serve phi word-sharded over this many mesh "
+                         "devices; a dense snapshot is re-split at load, a "
+                         ".sharded directory keeps its own layout (0/1 = "
+                         "unsharded)")
     # bench-mode training knobs
     ap.add_argument("--topics", type=int, default=32)
     ap.add_argument("--train-iters", type=int, default=25)
     ap.add_argument("--bench-docs", type=int, default=96)
     ap.add_argument("--seed", type=int, default=0)
     return ap
+
+
+def load_model(args, path: str | None = None):
+    """Load the snapshot honoring --shards: dense files are re-split into
+    word shards at load time, ``.sharded`` directories keep their layout."""
+    from repro.serve import load_any_snapshot
+
+    return load_any_snapshot(path or args.snapshot,
+                             shards=max(args.shards, 0))
 
 
 def make_engine(args, snap):
@@ -95,7 +109,7 @@ def _train_and_export(args, extra_iters: int = 0):
 
 def run_bench(args) -> int:
     import numpy as np
-    from repro.serve import load_snapshot
+    from repro.serve import ShardedModelSnapshot
     from repro.serve.eval import docs_from_corpus, heldout_perplexity
 
     corpus = None
@@ -105,9 +119,11 @@ def run_bench(args) -> int:
         t0 = time.perf_counter()
         corpus, _, _ = _train_and_export(args)
         print(f"[bench] trained + exported in {time.perf_counter() - t0:.1f}s")
-    snap = load_snapshot(args.snapshot)
+    snap = load_model(args)
+    layout = (f"V-sharded x{snap.num_shards}"
+              if isinstance(snap, ShardedModelSnapshot) else "dense")
     print(f"[bench] snapshot: V={snap.num_words} K={snap.num_topics} "
-          f"iteration={snap.meta.get('iteration')}")
+          f"iteration={snap.meta.get('iteration')} phi={layout}")
 
     # request storm: unseen synthetic docs with the same vocabulary
     from repro.data.synthetic import lda_corpus
@@ -135,7 +151,7 @@ def run_bench(args) -> int:
     # hot-swap: publish a further-trained snapshot; the engine keeps running
     print(f"[bench] training {args.train_iters + 15} iters for the v2 snapshot")
     _train_and_export(args, extra_iters=15)
-    snap2 = load_snapshot(args.snapshot)
+    snap2 = load_model(args)   # --shards: the v2 model hot-swaps in sharded too
     v = model.publish(snap2)
     results2 = engine.infer_many(docs[:16])
     moved = max(float(np.abs(r2["theta"] - r1["theta"]).sum())
@@ -154,9 +170,7 @@ def run_bench(args) -> int:
 def run_http(args) -> int:
     from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
-    from repro.serve import load_snapshot
-
-    snap = load_snapshot(args.snapshot)
+    snap = load_model(args)
     model, engine = make_engine(args, snap)
     print(f"[serve] V={snap.num_words} K={snap.num_topics} on "
           f"http://{args.host}:{args.port}")
@@ -202,6 +216,7 @@ def run_http(args) -> int:
                     "top_weights": res["top_weights"].tolist(),
                     "theta": res["theta"].tolist(),
                     "model_version": res["model_version"],
+                    "truncated": bool(res["truncated"]),
                     "latency_ms": res["latency_ms"],
                 })
             if self.path == "/swap":
@@ -209,7 +224,7 @@ def run_http(args) -> int:
                 if not path or not os.path.exists(path):
                     return self._reply(400, {"error": "snapshot path missing"})
                 try:
-                    v = model.publish(load_snapshot(path))
+                    v = model.publish(load_model(args, path))
                 except Exception as e:  # corrupt / non-snapshot file
                     return self._reply(400, {"error": f"bad snapshot: {e}"})
                 return self._reply(200, {"model_version": v})

@@ -4,22 +4,33 @@ Layers (each usable on its own):
 
 * ``snapshot`` — frozen-model artifact (phi + vocab + hyperparams) exported
   from a training ``LDAState``; double-buffered hot-swap so training can
-  publish fresh phi while the server keeps answering.
+  publish fresh phi while the server keeps answering.  Two layouts: dense
+  (one ``.npz``) and **V-sharded** (a ``.sharded`` directory of per-shard
+  blocks + manifest) for models whose phi exceeds one device.
 * ``infer``    — fold-in Gibbs for unseen documents against a frozen phi,
   jitted over (B, L) token batches, reusing the training sampler's S/Q split
-  and two-level blocked search.
+  and two-level blocked search; for sharded models the per-token phi gather
+  runs under ``shard_map`` on the shard owning each word id.
 * ``engine``   — micro-batching request engine: queue, shape bucketing,
-  batch-timeout flush, p50/p99 latency counters.
+  batch-timeout flush, one H2D transfer per batch, p50/p99 latency counters.
 * ``eval``     — held-out perplexity via the document-completion protocol.
 """
 from repro.serve.engine import EngineConfig, LDAServeEngine
 from repro.serve.eval import PerplexityResult, heldout_perplexity
-from repro.serve.infer import FoldInResult, InferConfig, fold_in, pack_docs
-from repro.serve.snapshot import (HotSwapModel, ModelSnapshot, load_snapshot,
-                                  save_snapshot, snapshot_from_state)
+from repro.serve.infer import (FoldInResult, InferConfig, fold_in,
+                               fold_in_config, pack_docs)
+from repro.serve.snapshot import (HotSwapModel, ModelSnapshot,
+                                  ShardedModelSnapshot,
+                                  assemble_sharded_snapshot, load_any_snapshot,
+                                  load_sharded_snapshot, load_snapshot,
+                                  save_sharded_snapshot, save_snapshot,
+                                  shard_snapshot, snapshot_from_state)
 
 __all__ = [
     "EngineConfig", "LDAServeEngine", "PerplexityResult", "heldout_perplexity",
-    "FoldInResult", "InferConfig", "fold_in", "pack_docs", "HotSwapModel",
-    "ModelSnapshot", "load_snapshot", "save_snapshot", "snapshot_from_state",
+    "FoldInResult", "InferConfig", "fold_in", "fold_in_config", "pack_docs",
+    "HotSwapModel", "ModelSnapshot", "ShardedModelSnapshot",
+    "assemble_sharded_snapshot", "load_any_snapshot", "load_sharded_snapshot",
+    "load_snapshot", "save_sharded_snapshot", "save_snapshot",
+    "shard_snapshot", "snapshot_from_state",
 ]

@@ -10,10 +10,19 @@ recompiles.
 
 phi comes from a ``HotSwapModel``: the worker acquires the active snapshot
 once per batch, so a publish() between batches changes answers without a
-restart and without tearing a batch.
+restart and without tearing a batch.  The snapshot may be dense (one-device
+phi) or a ``ShardedModelSnapshot`` (phi word-sharded over a mesh axis) —
+``fold_in_request`` dispatches, and the two hot-swap interchangeably.
+
+Device traffic: each batch crosses the host->device boundary exactly once —
+tokens, per-doc lengths, and the batch PRNG seed are packed into a single
+pinned int32 buffer (``pack_request_buffer``), mask and key are derived on
+device.  ``stats()['h2d_transfers']`` counts those transfers (== batches).
 
 Latency accounting is end-to-end per request (submit -> result ready);
-``stats()`` reports p50/p99 and docs/sec over the recorded window.
+``stats()`` reports p50/p99 and docs/sec over the recorded window, with the
+throughput span anchored at the *first request submit* so single-batch runs
+report an honest, non-zero rate.
 """
 from __future__ import annotations
 
@@ -28,8 +37,9 @@ from typing import Any, Sequence
 import numpy as np
 import jax
 
-from repro.serve.infer import InferConfig, fold_in, pack_docs
-from repro.serve.snapshot import HotSwapModel
+from repro.serve.infer import (InferConfig, fold_in_request,
+                               pack_request_buffer, serve_cache_size)
+from repro.serve.snapshot import HotSwapModel, ShardedModelSnapshot
 
 _SENTINEL = object()
 
@@ -58,10 +68,11 @@ def _bucket(value: int, buckets: Sequence[int]) -> int:
 
 
 class _Request:
-    __slots__ = ("tokens", "event", "result", "t_submit")
+    __slots__ = ("tokens", "truncated", "event", "result", "t_submit")
 
-    def __init__(self, tokens: np.ndarray):
+    def __init__(self, tokens: np.ndarray, truncated: bool = False):
         self.tokens = tokens
+        self.truncated = truncated
         self.event = threading.Event()
         self.result: dict[str, Any] | None = None
         self.t_submit = time.perf_counter()
@@ -76,11 +87,14 @@ class LDAServeEngine:
         self.cfg = cfg or EngineConfig()
         self._queue: queue.Queue = queue.Queue()
         self._lock = threading.Lock()
+        self._closed = False
         # bounded windows: stats stay O(window), not O(lifetime)
         self._latencies_ms: collections.deque = collections.deque(maxlen=4096)
         self._batch_sizes: collections.deque = collections.deque(maxlen=4096)
         self._docs_done = 0
+        self._batches_done = 0
         self._errors = 0
+        self._h2d_transfers = 0
         self._t_first: float | None = None
         self._t_last: float | None = None
         self._rng = np.random.default_rng(seed)
@@ -92,15 +106,25 @@ class LDAServeEngine:
         """Enqueue one document (1-D array of word ids); non-blocking.
 
         Raises ValueError on out-of-vocabulary ids — XLA's gather would
-        silently clamp them to the last phi row and serve a wrong answer.
+        silently clamp them to the last phi row and serve a wrong answer —
+        and RuntimeError once the engine has been stopped (a request put
+        behind the shutdown sentinel would never be served).
         """
         L_max = self.cfg.length_buckets[-1]
-        toks = np.asarray(tokens, np.int32).reshape(-1)[:L_max]
+        full = np.asarray(tokens, np.int32).reshape(-1)
+        toks = full[:L_max]
         v = self.model.acquire()[1].num_words
         if toks.size and (toks.min() < 0 or toks.max() >= v):
             raise ValueError(f"word ids must be in [0, {v})")
-        req = _Request(toks)
-        self._queue.put(req)
+        req = _Request(toks, truncated=full.size > L_max)
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("engine stopped")
+            if self._t_first is None:
+                # docs/sec span opens at first *submit*, not first batch
+                # completion: a single served batch must report real work
+                self._t_first = req.t_submit
+            self._queue.put(req)
         return req
 
     def infer(self, tokens, timeout: float | None = 30.0) -> dict[str, Any]:
@@ -123,8 +147,32 @@ class LDAServeEngine:
         return [r.result for r in reqs]
 
     def stop(self):
-        self._queue.put(_SENTINEL)
+        """Shut down: no new submits, and every still-pending request fails
+        fast (its event fires with an error) instead of hanging to timeout."""
+        with self._lock:
+            already = self._closed
+            self._closed = True
+        if not already:
+            self._queue.put(_SENTINEL)
         self._worker.join(timeout=30)
+        self._drain_pending("engine stopped")
+        if self._worker.is_alive():
+            # join timed out mid-batch and the drain may have eaten the
+            # sentinel — put one back so the worker still exits (instead of
+            # blocking in _collect forever) once its batch finishes
+            self._queue.put(_SENTINEL)
+
+    def _drain_pending(self, msg: str):
+        pending = []
+        while True:
+            try:
+                r = self._queue.get_nowait()
+            except queue.Empty:
+                break
+            if r is not _SENTINEL:
+                pending.append(r)
+        if pending:
+            self._fail(pending, msg)
 
     # -- metrics ------------------------------------------------------------
     def stats(self) -> dict[str, float]:
@@ -136,20 +184,22 @@ class LDAServeEngine:
             errors = self._errors
             span = ((self._t_last or 0.0) - (self._t_first or 0.0))
             mean_b = float(np.mean(self._batch_sizes)) if self._batch_sizes else 0.0
-            batches = len(self._batch_sizes)
+            batches = self._batches_done
+            h2d = self._h2d_transfers
         return dict(
             requests=float(n),
             errors=float(errors),
             batches=float(batches),
             mean_batch=mean_b,
+            h2d_transfers=float(h2d),
             p50_ms=float(np.percentile(lat, 50)) if lat.size else 0.0,
             p99_ms=float(np.percentile(lat, 99)) if lat.size else 0.0,
             docs_per_sec=(n / span) if span > 0 else 0.0,
         )
 
     def jit_cache_size(self) -> int:
-        """Compiled-variant count of the fold-in kernel (bucketing check)."""
-        return fold_in._cache_size()
+        """Compiled-variant count of the fold-in path (bucketing check)."""
+        return serve_cache_size()
 
     # -- worker -------------------------------------------------------------
     def _collect(self) -> list[_Request] | None:
@@ -181,10 +231,11 @@ class LDAServeEngine:
             r.event.set()
 
     def _run(self):
-        cfg = self.cfg
         while True:
             batch = self._collect()
             if batch is None:
+                # shutdown: fail anything still queued so callers unblock
+                self._drain_pending("engine stopped")
                 return
             # A failed batch must never kill the worker: pending requests
             # would hang and the queue would silently stop draining.
@@ -194,6 +245,17 @@ class LDAServeEngine:
                 traceback.print_exc()
                 self._fail([r for r in batch if not r.event.is_set()],
                            f"{type(e).__name__}: {e}")
+
+    def _to_device(self, packed: np.ndarray, snap):
+        """The batch's single H2D transfer (replicated over the snapshot's
+        mesh when phi is sharded)."""
+        with self._lock:
+            self._h2d_transfers += 1
+        if isinstance(snap, ShardedModelSnapshot):
+            from jax.sharding import NamedSharding, PartitionSpec
+            return jax.device_put(
+                packed, NamedSharding(snap.mesh, PartitionSpec()))
+        return jax.device_put(packed)
 
     def _serve_batch(self, batch: list[_Request]):
         cfg = self.cfg
@@ -216,32 +278,24 @@ class LDAServeEngine:
 
         B = _bucket(len(batch), cfg.batch_buckets())
         L = _bucket(max(len(r.tokens) for r in batch), cfg.length_buckets)
-        docs = [r.tokens for r in batch]
-        docs += [np.zeros(0, np.int32)] * (B - len(batch))  # pad docs
-        tokens, mask = pack_docs(docs, L)
-
-        key = jax.random.key(int(self._rng.integers(2**31)))
-        res = fold_in(
-            snap.phi_vk, snap.phi_sum, tokens, mask, key,
-            snap.alpha, snap.beta,
-            num_words_total=snap.num_words_total,
-            burn_in=cfg.infer.burn_in, samples=cfg.infer.samples,
-            top_k=cfg.infer.top_k, ell_capacity=cfg.infer.ell_capacity,
-            impl=cfg.infer.impl)
+        seed = int(self._rng.integers(2**31))
+        packed = pack_request_buffer([r.tokens for r in batch], B, L, seed)
+        buf = self._to_device(packed, snap)        # ONE H2D for the batch
+        res = fold_in_request(snap, buf, cfg.infer)
         theta = np.asarray(res.theta)
         tt = np.asarray(res.top_topics)
         tw = np.asarray(res.top_weights)
 
         now = time.perf_counter()
         with self._lock:
-            if self._t_first is None:
-                self._t_first = now
             self._t_last = now
             self._batch_sizes.append(len(batch))
+            self._batches_done += 1
             for i, r in enumerate(batch):
                 r.result = dict(
                     theta=theta[i], top_topics=tt[i], top_weights=tw[i],
                     model_version=version,
+                    truncated=r.truncated,
                     latency_ms=(now - r.t_submit) * 1e3,
                 )
                 self._latencies_ms.append(r.result["latency_ms"])

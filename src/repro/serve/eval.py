@@ -72,9 +72,14 @@ def heldout_perplexity(
     ev_tok, ev_mask = pack_docs(ev)
 
     res = fold_in_config(snap, est_tok, est_mask, jax.random.key(seed), cfg)
+    # theta estimation ran on the serving path (sharded or dense); the
+    # scoring pass below needs dense phi rows — assemble for sharded models
+    # (offline eval, so materializing phi on the host is acceptable)
+    from repro.serve.snapshot import ShardedModelSnapshot
+    score = snap.assemble() if isinstance(snap, ShardedModelSnapshot) else snap
     lp, n = likelihood.heldout_token_log_prob(
-        res.theta, snap.phi_vk, snap.phi_sum, ev_tok, ev_mask,
-        snap.beta, snap.num_words_total)
+        res.theta, score.phi_vk, score.phi_sum, ev_tok, ev_mask,
+        score.beta, score.num_words_total)
     lp, n = float(lp), int(n)
     # No evaluation tokens (all docs shorter than 2) -> NaN, not a perfect
     # 1.0: lower-is-better comparisons must not prefer an empty metric.

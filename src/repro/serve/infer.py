@@ -31,6 +31,16 @@ given the same key — same split tree, same uniforms):
   counts + gathered p* rows + the S/Q block sums stay on-chip across all
   sweeps (interpret mode on CPU);
 * ``"ref"``    — the kernel's pure-jnp oracle, for parity testing.
+
+Everything downstream of the per-token gather consumes only the gathered
+``(B, L, K)`` phi rows (``_fold_in_rows``), never the full ``(V, K)`` phi.
+That factoring is what makes **V-sharded serving** possible: for a
+``ShardedModelSnapshot`` the gather runs inside ``shard_map`` — each device
+gathers the rows of the word ids *its* phi block owns (zeros elsewhere) and
+a ``psum`` over the shard axis assembles the exact int32 rows — after which
+the identical replicated sweep code (XLA scan or the Pallas kernel, which
+only ever sees the gathered rows) produces draws bit-identical to the
+single-device path under the same key.
 """
 from __future__ import annotations
 
@@ -76,34 +86,29 @@ def _theta_counts(z: Array, mask: Array, num_topics: int) -> Array:
     return updates.theta_from_z(z, rows, mask, B, num_topics)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("num_words_total", "burn_in", "samples", "top_k",
-                     "ell_capacity", "impl", "interpret"),
-)
-def fold_in(
-    phi_vk: Array,      # (V, K) int32 — frozen topic-word counts
+def _fold_in_rows(
+    phi_tok: Array,     # (B, L, K) int32 — gathered phi rows, one per token
     phi_sum: Array,     # (K,) int32 — frozen per-topic totals
-    tokens: Array,      # (B, L) int32 word ids (anything under mask=False ok)
     mask: Array,        # (B, L) bool — False on padding slots
     key: Array,
     alpha,              # traced scalars: a snapshot with different
     beta,               # hyperparams hot-swaps without recompiling
     *,
     num_words_total: int,
-    burn_in: int = 8,
-    samples: int = 4,
-    top_k: int = 8,
-    ell_capacity: int | None = None,
-    impl: str = "xla",
-    interpret: bool | None = None,
+    burn_in: int,
+    samples: int,
+    top_k: int,
+    ell_capacity: int | None,
+    impl: str,
+    interpret: bool | None,
 ) -> FoldInResult:
-    """Estimate theta for a batch of unseen documents against frozen phi.
+    """The fold-in sweeps, downstream of the per-token phi gather.
 
-    ``interpret=None`` resolves by backend: the Pallas kernel compiles on
-    TPU and falls back to the interpreter everywhere else.
+    Partition-agnostic: ``phi_tok`` may come from a single-device
+    ``phi_vk[tokens]`` or from a sharded local-gather + psum — the draws are
+    identical either way (int32 rows are exact under psum).
     """
-    B, L = tokens.shape
+    B, L = mask.shape
     K = phi_sum.shape[0]
     P = min(ell_capacity or L, L, K)
     kk = min(top_k, K)
@@ -118,7 +123,7 @@ def fold_in(
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
         tsum, sps, ssqs = foldin_ops.fold_in_sweeps(
-            phi_vk, phi_sum, tokens, mask, key, alpha, beta,
+            phi_tok, phi_sum, mask, key, alpha, beta,
             num_words_total=num_words_total, burn_in=burn_in,
             samples=samples, ell_capacity=P, impl=impl, interpret=interpret)
         return _assemble(tsum, sps.sum(), ssqs.sum(), alpha, samples, kk,
@@ -126,7 +131,7 @@ def fold_in(
 
     # C7: the Eq. 1 word factor, gathered once per request token and shared
     # by every sweep (the training sampler's per-tile p*, per-token here).
-    pstar_tok = sampler.pstar(phi_vk[tokens], phi_sum, beta,
+    pstar_tok = sampler.pstar(phi_tok, phi_sum, beta,
                               num_words_total)            # (B, L, K)
     Q = alpha * pstar_tok.sum(-1)                         # (B, L)
     flat_pstar = pstar_tok.reshape(B * L, K)
@@ -167,6 +172,40 @@ def fold_in(
                      kk, denom)
 
 
+_STATICS = ("num_words_total", "burn_in", "samples", "top_k", "ell_capacity",
+            "impl", "interpret")
+
+
+@functools.partial(jax.jit, static_argnames=_STATICS)
+def fold_in(
+    phi_vk: Array,      # (V, K) int32 — frozen topic-word counts
+    phi_sum: Array,     # (K,) int32 — frozen per-topic totals
+    tokens: Array,      # (B, L) int32 word ids (anything under mask=False ok)
+    mask: Array,        # (B, L) bool — False on padding slots
+    key: Array,
+    alpha,
+    beta,
+    *,
+    num_words_total: int,
+    burn_in: int = 8,
+    samples: int = 4,
+    top_k: int = 8,
+    ell_capacity: int | None = None,
+    impl: str = "xla",
+    interpret: bool | None = None,
+) -> FoldInResult:
+    """Estimate theta for a batch of unseen documents against frozen phi.
+
+    ``interpret=None`` resolves by backend: the Pallas kernel compiles on
+    TPU and falls back to the interpreter everywhere else.
+    """
+    return _fold_in_rows(
+        phi_vk[tokens], phi_sum, mask, key, alpha, beta,
+        num_words_total=num_words_total, burn_in=burn_in, samples=samples,
+        top_k=top_k, ell_capacity=ell_capacity, impl=impl,
+        interpret=interpret)
+
+
 def _assemble(theta_sum, sp_total, ssq_total, alpha, samples: int, kk: int,
               denom) -> FoldInResult:
     """Sweep partials -> FoldInResult; shared by every impl so the contract
@@ -183,8 +222,182 @@ def _assemble(theta_sum, sp_total, ssq_total, alpha, samples: int, kk: int,
     )
 
 
+# ---------------------------------------------------------------------------
+# packed request buffer: ONE host->device transfer per engine batch
+# ---------------------------------------------------------------------------
+# The engine used to ship tokens + mask (+ a host-built PRNG key) as separate
+# arrays; every jit call committed each one to the device.  The packed
+# buffer fuses the whole request batch into a single pinned int32 array:
+#
+#     row i < B :  [tok_0, ..., tok_{L-1}, doc_length_i]
+#     row B     :  [batch_seed, 0, ...]
+#
+# so exactly one H2D transfer carries a batch, and mask/key are derived on
+# device (mask = iota < length; key = jax.random.key(seed) — identical to
+# the key the engine used to build on the host from the same seed int).
+
+
+def pack_request_buffer(docs: Sequence[np.ndarray], batch: int, length: int,
+                        seed: int) -> np.ndarray:
+    """Per-doc word-id arrays -> one (batch+1, length+1) int32 buffer."""
+    buf = np.zeros((batch + 1, length + 1), np.int32)
+    for i, d in enumerate(docs):
+        d = np.asarray(d, np.int32)[:length]
+        buf[i, : len(d)] = d
+        buf[i, length] = len(d)
+    buf[batch, 0] = seed
+    return buf
+
+
+def _unpack_request_buffer(buf: Array):
+    """(B+1, L+1) device buffer -> tokens (B, L), mask (B, L), key."""
+    B, L = buf.shape[0] - 1, buf.shape[1] - 1
+    tokens = buf[:-1, :L]
+    lengths = buf[:-1, L]
+    mask = jax.lax.broadcasted_iota(jnp.int32, (B, L), 1) < lengths[:, None]
+    key = jax.random.key(buf[-1, 0])
+    return tokens, mask, key
+
+
+@functools.partial(jax.jit, static_argnames=_STATICS)
+def fold_in_buffer(
+    phi_vk: Array,      # (V, K) int32
+    phi_sum: Array,     # (K,) int32
+    buf: Array,         # (B+1, L+1) int32 packed request buffer (on device)
+    hyper: Array,       # (2,) float32 — [alpha, beta], staged once per snapshot
+    *,
+    num_words_total: int,
+    burn_in: int = 8,
+    samples: int = 4,
+    top_k: int = 8,
+    ell_capacity: int | None = None,
+    impl: str = "xla",
+    interpret: bool | None = None,
+) -> FoldInResult:
+    """``fold_in`` over a packed request buffer (the engine's batch unit)."""
+    tokens, mask, key = _unpack_request_buffer(buf)
+    return _fold_in_rows(
+        phi_vk[tokens], phi_sum, mask, key, hyper[0], hyper[1],
+        num_words_total=num_words_total, burn_in=burn_in, samples=samples,
+        top_k=top_k, ell_capacity=ell_capacity, impl=impl,
+        interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# V-sharded fold-in: phi partitioned over a mesh axis, gather via psum
+# ---------------------------------------------------------------------------
+
+_SHARDED_JITS: list = []   # every built sharded jit, for cache-size probes
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_fold_in_fns(mesh, axis: str, num_words_total: int, burn_in: int,
+                         samples: int, top_k: int, ell_capacity: int | None,
+                         impl: str, interpret: bool | None):
+    """Build (and cache per mesh + schedule) the shard_map'd fold-in.
+
+    Layout inside the map: each device holds one (Vs, K) phi block plus the
+    replicated (V,) word->shard / word->local-row maps.  The per-token
+    gather runs on the shard owning each word id — rows of foreign words are
+    zeros — and a ``psum`` over the shard axis assembles the exact int32
+    (B, L, K) rows, 1/S of the single-device gather traffic per device.
+    Everything after the psum is replicated compute through the same
+    ``_fold_in_rows`` as the dense path, so sharded serving is draw-identical
+    to single-device serving under the same key.
+
+    Returns ``(run_tokens, run_buffer)`` jitted entry points.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.partition import shard_map_compat
+
+    kw = dict(num_words_total=num_words_total, burn_in=burn_in,
+              samples=samples, top_k=top_k, ell_capacity=ell_capacity,
+              impl=impl, interpret=interpret)
+    repl = P()
+
+    def inner(phi_blk, phi_sum, shard_of, local_id, tokens, mask, key_data,
+              hyper):
+        s = jax.lax.axis_index(axis)
+        tok_shard = shard_of[tokens]                       # (B, L)
+        mine = tok_shard == s
+        rows = phi_blk[0][jnp.where(mine, local_id[tokens], 0)]
+        rows = jnp.where(mine[..., None], rows, 0)         # foreign words: 0
+        phi_tok = jax.lax.psum(rows, axis)                 # exact int32 rows
+        key = jax.random.wrap_key_data(key_data)
+        return _fold_in_rows(phi_tok, phi_sum, mask, key, hyper[0], hyper[1],
+                             **kw)
+
+    mapped = shard_map_compat(
+        inner, mesh=mesh,
+        in_specs=(P(axis), repl, repl, repl, repl, repl, repl, repl),
+        out_specs=FoldInResult(repl, repl, repl, repl, repl))
+
+    def run_tokens(phi_blocks, phi_sum, shard_of, local_id, tokens, mask,
+                   key, hyper):
+        return mapped(phi_blocks, phi_sum, shard_of, local_id, tokens,
+                      mask.astype(bool), jax.random.key_data(key), hyper)
+
+    def run_buffer(phi_blocks, phi_sum, shard_of, local_id, buf, hyper):
+        tokens, mask, key = _unpack_request_buffer(buf)
+        return mapped(phi_blocks, phi_sum, shard_of, local_id, tokens, mask,
+                      jax.random.key_data(key), hyper)
+
+    fns = (jax.jit(run_tokens), jax.jit(run_buffer))
+    _SHARDED_JITS.extend(fns)
+    return fns
+
+
+def _sharded_statics(snap, cfg: InferConfig, interpret: bool | None):
+    return (snap.mesh, snap.axis, snap.num_words_total, cfg.burn_in,
+            cfg.samples, cfg.top_k, cfg.ell_capacity, cfg.impl, interpret)
+
+
+def fold_in_sharded(snap, tokens, mask, key, cfg: InferConfig,
+                    interpret: bool | None = None) -> FoldInResult:
+    """Fold-in against a ``ShardedModelSnapshot`` (explicit tokens + key)."""
+    run_tokens, _ = _sharded_fold_in_fns(*_sharded_statics(snap, cfg,
+                                                           interpret))
+    with snap.mesh:
+        return run_tokens(snap.phi_blocks, snap.phi_sum, snap.word_shard_of,
+                          snap.word_local_id, jnp.asarray(tokens, jnp.int32),
+                          jnp.asarray(mask), key, snap.hyper)
+
+
+def fold_in_request(snap, buf, cfg: InferConfig,
+                    interpret: bool | None = None) -> FoldInResult:
+    """One engine batch from a packed request buffer, against either a dense
+    ``ModelSnapshot`` or a ``ShardedModelSnapshot`` (dispatch point)."""
+    from repro.serve.snapshot import ShardedModelSnapshot
+
+    if isinstance(snap, ShardedModelSnapshot):
+        _, run_buffer = _sharded_fold_in_fns(*_sharded_statics(snap, cfg,
+                                                               interpret))
+        with snap.mesh:
+            return run_buffer(snap.phi_blocks, snap.phi_sum,
+                              snap.word_shard_of, snap.word_local_id, buf,
+                              snap.hyper)
+    return fold_in_buffer(
+        snap.phi_vk, snap.phi_sum, buf, snap.hyper,
+        num_words_total=snap.num_words_total, burn_in=cfg.burn_in,
+        samples=cfg.samples, top_k=cfg.top_k, ell_capacity=cfg.ell_capacity,
+        impl=cfg.impl, interpret=interpret)
+
+
+def serve_cache_size() -> int:
+    """Compiled-variant count across every serving entry point (the engine's
+    bucketing invariant: a batch in a seen (B, L) bucket never recompiles)."""
+    return (fold_in._cache_size() + fold_in_buffer._cache_size()
+            + sum(f._cache_size() for f in _SHARDED_JITS))
+
+
 def fold_in_config(snapshot, tokens, mask, key, cfg: InferConfig) -> FoldInResult:
-    """Convenience wrapper: run ``fold_in`` from a snapshot + InferConfig."""
+    """Convenience wrapper: run fold-in from a (dense or sharded) snapshot
+    + InferConfig."""
+    from repro.serve.snapshot import ShardedModelSnapshot
+
+    if isinstance(snapshot, ShardedModelSnapshot):
+        return fold_in_sharded(snapshot, tokens, mask, key, cfg)
     return fold_in(
         snapshot.phi_vk, snapshot.phi_sum, tokens, mask, key,
         snapshot.alpha, snapshot.beta,

@@ -5,34 +5,51 @@ topic-word model: phi_vk (V, K), phi_sum (K,), the hyperparams that define
 Eq. 1, and optionally the vocabulary strings.  A snapshot freezes exactly
 that — it is to serving what the checkpoint's canonical z is to training.
 
-File format: one ``.npz`` (count arrays + vocab) written atomically
-(tmp + fsync + rename, same discipline as ``distributed.checkpoint``) with a
-sidecar-free embedded JSON meta entry, so a snapshot is always either absent
-or complete.
+Two on-disk layouts, both written atomically (tmp + fsync + rename, same
+discipline as ``distributed.checkpoint``), so a snapshot is always either
+absent or complete:
+
+* **dense** — one ``.npz`` (count arrays + vocab) with an embedded JSON
+  meta entry; loads to a single-device ``ModelSnapshot``.
+* **V-sharded** — a ``.sharded`` *directory*: ``manifest.json`` +
+  ``maps.npz`` (the (V,) word->shard and word->local-row maps + phi_sum)
+  + one ``shard_NNNN.npz`` per phi block.  Loads to a
+  ``ShardedModelSnapshot`` whose (S, Vs, K) phi lives word-sharded across a
+  mesh axis — for models whose (V, K) phi exceeds one device (the paper's
+  Sec. 4.1 vocabulary partition applied to serving).  The per-shard files
+  mean a 2D trainer can publish each device's local block directly, never
+  materializing the full phi anywhere.
 
 Hot-swap (``HotSwapModel``): double-buffered publication.  The loader stages
 the incoming phi into the inactive buffer (device transfer happens *outside*
 the serving lock), then flips the active index — readers always see a fully
 materialized model, and in-flight batches keep the buffer they acquired.
 This is the paper's delayed-count semantics applied across processes: the
-server answers against iteration-N phi while iteration-N+1 trains.
+server answers against iteration-N phi while iteration-N+1 trains.  Dense
+and sharded snapshots hot-swap interchangeably.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import json
 import os
+import shutil
 import tempfile
 import threading
 import time
 from typing import Any, Sequence
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 Array = jnp.ndarray
 
 _FORMAT_VERSION = 1
+SHARDED_SUFFIX = ".sharded"
+_MANIFEST = "manifest.json"
+_MAPS = "maps.npz"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,6 +72,12 @@ class ModelSnapshot:
     def num_words(self) -> int:
         return int(self.phi_vk.shape[0])
 
+    @functools.cached_property
+    def hyper(self) -> Array:
+        """[alpha, beta] staged on device once, so a serving batch never
+        re-transfers scalar hyperparams."""
+        return jnp.asarray([self.alpha, self.beta], jnp.float32)
+
     def topic_words(self, k: int, n: int = 10) -> list[str]:
         """Top-n vocabulary entries of topic k (debug/explain endpoint)."""
         col = np.asarray(self.phi_vk)[:, k]
@@ -62,6 +85,64 @@ class ModelSnapshot:
         if self.vocab is None:
             return [str(v) for v in top]
         return [self.vocab[v] for v in top]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedModelSnapshot:
+    """Frozen model whose phi is word-sharded over a mesh axis.
+
+    ``phi_blocks[s]`` holds the rows of the words ``word_shard_of`` assigns
+    to shard s, at local row ``word_local_id`` — each block resident on its
+    own mesh device, so the model loads even when (V, K) exceeds one
+    device.  The maps make the layout general: contiguous blocks
+    (``plan_contiguous_shards``) and the 2D trainer's LPT-balanced shards
+    both serve through the same gather.
+    """
+
+    phi_blocks: Array        # (S, Vs, K) int32, leading axis mesh-sharded
+    phi_sum: Array           # (K,) int32, replicated
+    word_shard_of: Array     # (V,) int32 — owning shard per word id
+    word_local_id: Array     # (V,) int32 — row within the owner's block
+    alpha: float
+    beta: float
+    num_words_total: int
+    mesh: Any                # jax.sharding.Mesh carrying the shard axis
+    axis: str = "shards"
+    meta: dict = dataclasses.field(default_factory=dict)
+    vocab: tuple[str, ...] | None = None
+
+    @property
+    def num_topics(self) -> int:
+        return int(self.phi_sum.shape[0])
+
+    @property
+    def num_words(self) -> int:
+        """Valid word-id bound — the full vocabulary (every id routable)."""
+        return int(self.word_shard_of.shape[0])
+
+    @property
+    def num_shards(self) -> int:
+        return int(self.phi_blocks.shape[0])
+
+    @functools.cached_property
+    def hyper(self) -> Array:
+        return jax.device_put(
+            np.asarray([self.alpha, self.beta], np.float32),
+            jax.sharding.NamedSharding(self.mesh,
+                                       jax.sharding.PartitionSpec()))
+
+    def assemble(self) -> ModelSnapshot:
+        """Gather to a host-dense ModelSnapshot (tests / offline eval — the
+        serving path never materializes this)."""
+        blocks = np.asarray(jax.device_get(self.phi_blocks))
+        shard_of = np.asarray(jax.device_get(self.word_shard_of))
+        local_id = np.asarray(jax.device_get(self.word_local_id))
+        return ModelSnapshot(
+            phi_vk=jnp.asarray(blocks[shard_of, local_id], jnp.int32),
+            phi_sum=jnp.asarray(self.phi_sum, jnp.int32),
+            alpha=self.alpha, beta=self.beta,
+            num_words_total=self.num_words_total,
+            meta=dict(self.meta), vocab=self.vocab)
 
 
 def snapshot_from_state(
@@ -140,6 +221,221 @@ def load_snapshot(path: str) -> ModelSnapshot:
         )
 
 
+# ---------------------------------------------------------------------------
+# V-sharded snapshots
+# ---------------------------------------------------------------------------
+
+def plan_contiguous_shards(num_words: int, num_shards: int):
+    """Contiguous word->shard layout: shard s owns rows [s*Vs, (s+1)*Vs).
+
+    Returns (shard_of (V,), local_id (V,), rows_per_shard)."""
+    if num_shards < 1:
+        raise ValueError("num_shards must be >= 1")
+    rows = -(-num_words // num_shards)   # ceil
+    ids = np.arange(num_words, dtype=np.int64)
+    return ((ids // rows).astype(np.int32), (ids % rows).astype(np.int32),
+            int(rows))
+
+
+def serving_mesh(num_shards: int, axis: str = "shards"):
+    """1-axis mesh over the first ``num_shards`` local devices."""
+    devs = jax.devices()
+    if len(devs) < num_shards:
+        raise ValueError(
+            f"serving {num_shards} phi shards needs >= {num_shards} devices; "
+            f"have {len(devs)} (hint: XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={num_shards} on CPU)")
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(devs[:num_shards]), (axis,))
+
+
+def split_dense_phi(phi: np.ndarray, num_shards: int):
+    """(V, K) dense phi -> contiguous (S, Vs, K) blocks + their word maps.
+
+    The one place the dense->sharded split lives: ``shard_snapshot``,
+    ``save_sharded_snapshot`` and ``DistributedLDA.publish_snapshot``'s
+    re-split fallback all call this."""
+    phi = np.asarray(phi, np.int32)
+    shard_of, local_id, rows = plan_contiguous_shards(phi.shape[0],
+                                                      num_shards)
+    blocks = np.zeros((num_shards, rows, phi.shape[1]), np.int32)
+    blocks[shard_of, local_id] = phi
+    return blocks, shard_of, local_id
+
+
+def _sharded_from_blocks(blocks, phi_sum, shard_of, local_id, alpha, beta,
+                         num_words_total, meta, vocab,
+                         mesh=None, axis: str = "shards") -> ShardedModelSnapshot:
+    """Place host blocks onto the mesh: block s on shard-axis position s,
+    maps + phi_sum replicated."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    blocks = np.asarray(blocks, np.int32)
+    mesh = mesh if mesh is not None else serving_mesh(blocks.shape[0], axis)
+    axis = mesh.axis_names[0]
+    if mesh.devices.size != blocks.shape[0]:
+        raise ValueError(f"mesh has {mesh.devices.size} devices for "
+                         f"{blocks.shape[0]} phi shards")
+    repl = NamedSharding(mesh, P())
+    return ShardedModelSnapshot(
+        phi_blocks=jax.device_put(blocks, NamedSharding(mesh, P(axis))),
+        phi_sum=jax.device_put(np.asarray(phi_sum, np.int32), repl),
+        word_shard_of=jax.device_put(np.asarray(shard_of, np.int32), repl),
+        word_local_id=jax.device_put(np.asarray(local_id, np.int32), repl),
+        alpha=float(alpha), beta=float(beta),
+        num_words_total=int(num_words_total), mesh=mesh, axis=axis,
+        meta=dict(meta or {}),
+        vocab=tuple(vocab) if vocab is not None else None)
+
+
+def shard_snapshot(snap: ModelSnapshot, num_shards: int,
+                   mesh=None) -> ShardedModelSnapshot:
+    """Split a dense snapshot into ``num_shards`` contiguous word blocks,
+    each placed on its own mesh device (in-memory; no disk round-trip)."""
+    blocks, shard_of, local_id = split_dense_phi(snap.phi_vk, num_shards)
+    return _sharded_from_blocks(
+        blocks, np.asarray(snap.phi_sum), shard_of, local_id, snap.alpha,
+        snap.beta, snap.num_words_total, snap.meta, snap.vocab, mesh)
+
+
+def write_sharded_snapshot(path: str, blocks, phi_sum, shard_of, local_id, *,
+                           alpha: float, beta: float, num_words_total: int,
+                           meta: dict | None = None, vocab=None) -> str:
+    """Write the sharded layout from host-side blocks (the low-level writer;
+    ``save_sharded_snapshot`` and ``DistributedLDA.publish_snapshot`` both
+    land here).  Atomic at directory granularity: everything is staged into
+    a tmp dir (each file fsync'd) and renamed into place, so a crash
+    mid-save never leaves a partial snapshot directory."""
+    blocks = [np.asarray(b, np.int32) for b in blocks]
+    parent = os.path.dirname(os.path.abspath(path)) or "."
+    os.makedirs(parent, exist_ok=True)
+
+    def _put(name: str, writer):
+        fp = os.path.join(tmp, name)
+        with open(fp, "wb") as f:
+            writer(f)
+            f.flush()
+            os.fsync(f.fileno())
+
+    tmp = tempfile.mkdtemp(dir=parent, suffix=".tmp")
+    try:
+        manifest = {
+            "version": _FORMAT_VERSION,
+            "num_shards": len(blocks),
+            "rows_per_shard": int(blocks[0].shape[0]),
+            "num_topics": int(blocks[0].shape[1]),
+            "num_words_total": int(num_words_total),
+            "alpha": float(alpha),
+            "beta": float(beta),
+            "meta": dict(meta or {}),
+        }
+        _put(_MANIFEST, lambda f: f.write(json.dumps(manifest).encode()))
+        maps = dict(word_shard_of=np.asarray(shard_of, np.int32),
+                    word_local_id=np.asarray(local_id, np.int32),
+                    phi_sum=np.asarray(phi_sum, np.int32))
+        if vocab is not None:
+            maps["vocab"] = np.asarray(vocab, dtype=np.str_)
+        _put(_MAPS, lambda f: np.savez_compressed(f, **maps))
+        for s, blk in enumerate(blocks):
+            _put(f"shard_{s:04d}.npz",
+                 lambda f, b=blk: np.savez_compressed(f, phi_vk=b))
+        # Overwrite without a window where no complete copy exists: move
+        # the old directory aside first (a crash here leaves the previous
+        # snapshot recoverable at .stale + the complete staged tmp), then
+        # rename the new one in and only then drop the stale copy.
+        stale = None
+        if os.path.exists(path):
+            stale = tempfile.mkdtemp(dir=parent, suffix=".stale")
+            os.rmdir(stale)
+            os.replace(path, stale)
+        os.replace(tmp, path)
+        if stale is not None:
+            shutil.rmtree(stale)
+    finally:
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+    return path
+
+
+def save_sharded_snapshot(path: str, snap, num_shards: int | None = None) -> str:
+    """Save ``snap`` in the sharded layout.
+
+    ``snap`` may be a ``ShardedModelSnapshot`` (its own layout is kept) or a
+    dense ``ModelSnapshot`` + ``num_shards`` (contiguous split)."""
+    if isinstance(snap, ShardedModelSnapshot):
+        return write_sharded_snapshot(
+            path, np.asarray(jax.device_get(snap.phi_blocks)),
+            np.asarray(jax.device_get(snap.phi_sum)),
+            np.asarray(jax.device_get(snap.word_shard_of)),
+            np.asarray(jax.device_get(snap.word_local_id)),
+            alpha=snap.alpha, beta=snap.beta,
+            num_words_total=snap.num_words_total, meta=snap.meta,
+            vocab=snap.vocab)
+    if not num_shards:
+        raise ValueError("num_shards required to shard a dense snapshot")
+    blocks, shard_of, local_id = split_dense_phi(snap.phi_vk, num_shards)
+    return write_sharded_snapshot(
+        path, blocks, np.asarray(snap.phi_sum), shard_of, local_id,
+        alpha=snap.alpha, beta=snap.beta,
+        num_words_total=snap.num_words_total, meta=snap.meta, vocab=snap.vocab)
+
+
+def is_sharded_snapshot_path(path: str) -> bool:
+    return os.path.isdir(path) and os.path.exists(os.path.join(path, _MANIFEST))
+
+
+def _read_sharded(path: str):
+    """Host-side read of the sharded layout -> (blocks, maps, manifest)."""
+    with open(os.path.join(path, _MANIFEST)) as f:
+        manifest = json.load(f)
+    with np.load(os.path.join(path, _MAPS), allow_pickle=False) as d:
+        maps = {k: d[k] for k in d.files}
+    blocks = []
+    for s in range(int(manifest["num_shards"])):
+        with np.load(os.path.join(path, f"shard_{s:04d}.npz"),
+                     allow_pickle=False) as d:
+            blocks.append(d["phi_vk"])
+    return blocks, maps, manifest
+
+
+def load_sharded_snapshot(path: str, mesh=None) -> ShardedModelSnapshot:
+    """Load a sharded snapshot with each phi block on its own mesh device."""
+    blocks, maps, manifest = _read_sharded(path)
+    vocab = ([str(w) for w in maps["vocab"]] if "vocab" in maps else None)
+    return _sharded_from_blocks(
+        np.stack(blocks), maps["phi_sum"], maps["word_shard_of"],
+        maps["word_local_id"], manifest["alpha"], manifest["beta"],
+        manifest["num_words_total"], manifest.get("meta", {}), vocab, mesh)
+
+
+def assemble_sharded_snapshot(path: str) -> ModelSnapshot:
+    """Read a sharded snapshot into a host-dense ModelSnapshot without any
+    mesh (verification / single-device fallback for small models)."""
+    blocks, maps, manifest = _read_sharded(path)
+    stacked = np.stack(blocks)
+    phi = stacked[maps["word_shard_of"], maps["word_local_id"]]
+    vocab = (tuple(str(w) for w in maps["vocab"]) if "vocab" in maps
+             else None)
+    return ModelSnapshot(
+        phi_vk=jnp.asarray(phi, jnp.int32),
+        phi_sum=jnp.asarray(maps["phi_sum"], jnp.int32),
+        alpha=float(manifest["alpha"]), beta=float(manifest["beta"]),
+        num_words_total=int(manifest["num_words_total"]),
+        meta=dict(manifest.get("meta", {})), vocab=vocab)
+
+
+def load_any_snapshot(path: str, mesh=None, shards: int | None = None):
+    """Dispatch on layout: ``.sharded`` directories load mesh-sharded, dense
+    ``.npz`` files load single-device; ``shards > 1`` re-shards a dense
+    snapshot at load time (serve_lda --shards)."""
+    if is_sharded_snapshot_path(path):
+        return load_sharded_snapshot(path, mesh)
+    snap = load_snapshot(path)
+    if shards and shards > 1:
+        return shard_snapshot(snap, shards, mesh)
+    return snap
+
+
 class HotSwapModel:
     """Double-buffered snapshot holder: publish() while serving continues.
 
@@ -149,8 +445,9 @@ class HotSwapModel:
     happens before the flip, so the critical section is a pointer swap.
     """
 
-    def __init__(self, snap: ModelSnapshot):
-        self._buffers: list[ModelSnapshot | None] = [snap, None]
+    def __init__(self, snap: ModelSnapshot | ShardedModelSnapshot):
+        self._buffers: list[ModelSnapshot | ShardedModelSnapshot | None] = [
+            snap, None]
         self._active = 0
         self._version = 1
         self._lock = threading.Lock()
@@ -159,11 +456,11 @@ class HotSwapModel:
     def version(self) -> int:
         return self._version
 
-    def acquire(self) -> tuple[int, ModelSnapshot]:
+    def acquire(self) -> tuple[int, ModelSnapshot | ShardedModelSnapshot]:
         with self._lock:
             return self._version, self._buffers[self._active]
 
-    def publish(self, snap: ModelSnapshot) -> int:
+    def publish(self, snap: ModelSnapshot | ShardedModelSnapshot) -> int:
         """Stage into the inactive buffer, then flip.  Returns new version."""
         staged = snap  # arrays already device-resident (constructor/load)
         with self._lock:

@@ -237,6 +237,91 @@ class TestEngine:
             eng.stop()
 
 
+class TestEngineLifecycleAndAccounting:
+    """Regression tests for the ISSUE 3 engine bugfixes: submit-after-stop,
+    the docs/sec span anchor, surfaced truncation, and the one-H2D-per-batch
+    transfer contract."""
+
+    def _engine(self, snap, max_batch=4, delay_ms=150.0):
+        return LDAServeEngine(
+            HotSwapModel(snap),
+            EngineConfig(max_batch=max_batch, max_delay_ms=delay_ms,
+                         length_buckets=(32, 64),
+                         infer=InferConfig(burn_in=3, samples=2)))
+
+    def test_submit_after_stop_raises(self, planted_snapshot):
+        """Pre-fix: submit() kept enqueueing behind the shutdown sentinel and
+        the caller hung until timeout."""
+        eng = self._engine(planted_snapshot)
+        eng.infer(np.arange(8, dtype=np.int32))
+        eng.stop()
+        with pytest.raises(RuntimeError, match="engine stopped"):
+            eng.submit(np.arange(8, dtype=np.int32))
+
+    def test_pending_requests_fail_fast_on_shutdown(self, planted_snapshot):
+        """A request that raced past the closed check must get its event set
+        with an error on shutdown, never hang."""
+        from repro.serve.engine import _Request
+
+        eng = self._engine(planted_snapshot)
+        eng.stop()
+        req = _Request(np.arange(8, dtype=np.int32))
+        eng._queue.put(req)          # simulate a submit/stop race
+        eng.stop()                   # idempotent; drains + fails pending
+        assert req.event.is_set()
+        assert "error" in req.result
+
+    def test_single_batch_reports_nonzero_docs_per_sec(self, planted_snapshot):
+        """Pre-fix: the span was anchored at the *first batch completion*, so
+        one served batch reported 0 docs/sec (and multi-batch runs dropped
+        the first batch's work time)."""
+        eng = self._engine(planted_snapshot)
+        try:
+            eng.infer(np.arange(8, dtype=np.int32))
+            s = eng.stats()
+            assert s["batches"] == 1.0
+            assert np.isfinite(s["docs_per_sec"]) and s["docs_per_sec"] > 0, s
+        finally:
+            eng.stop()
+
+    def test_truncation_surfaced(self, planted_snapshot):
+        """Pre-fix: docs longer than the largest length bucket were silently
+        cut to 64 tokens and the caller never learned."""
+        eng = self._engine(planted_snapshot)
+        try:
+            long_doc = np.zeros(100, np.int32)     # > max bucket (64)
+            r = eng.infer(long_doc)
+            assert r["truncated"] is True
+            r = eng.infer(np.zeros(10, np.int32))
+            assert r["truncated"] is False
+        finally:
+            eng.stop()
+
+    def test_one_h2d_transfer_per_batch(self, planted_snapshot, monkeypatch):
+        """The whole request batch (tokens + lengths + PRNG seed) crosses
+        host->device as ONE packed buffer: count jax.device_put calls."""
+        import jax as jax_mod
+
+        eng = self._engine(planted_snapshot, max_batch=4)
+        try:
+            docs = [np.arange(10, dtype=np.int32)] * 4
+            eng.infer_many(docs)                   # warm the (4, 32) bucket
+            b0 = eng.stats()["batches"]
+            calls = []
+            real = jax_mod.device_put
+            monkeypatch.setattr(
+                jax_mod, "device_put",
+                lambda *a, **k: (calls.append(1), real(*a, **k))[1])
+            eng.infer_many(docs)
+            s = eng.stats()
+            served = s["batches"] - b0
+            assert served >= 1
+            assert len(calls) == served, (len(calls), served)
+            assert s["h2d_transfers"] == s["batches"], s
+        finally:
+            eng.stop()
+
+
 def test_trainer_surfaces_mean_s_over_sq(tiny_corpus):
     """Satellite: the S/(S+Q) diagnostic is real, not the old hardcoded 0."""
     from repro.core import trainer
