@@ -1,62 +1,85 @@
-"""Serving path: fold-in latency/throughput vs batch size, K, impl, and
-phi sharding.
+"""Serving path: fold-in latency/throughput vs batch size, K, impl, phi
+sharding, and — for sharded phi — the gather comm strategy.
 
 Measurements per (B, K) point:
   * ``foldin_<impl>_*`` — the raw jitted fold-in call for every ``impl``
     (``xla``: the original scan; ``pallas``: the ``repro.kernels.fold_in``
     kernel, interpret mode off-TPU; ``ref``: the kernel's jnp oracle), so
     the kernel's speedup is *measured* per point, not asserted;
-  * ``foldin_shard*`` — the same call against a **V-sharded** snapshot
-    (phi split over a mesh axis, per-token gather on the owning shard +
-    psum), the single-device vs sharded comparison of ISSUE 3;
+  * ``foldin_shard{S}_psum_*`` / ``foldin_shard{S}_a2a_*`` — the same call
+    against a **V-sharded** snapshot under each comm strategy: full
+    ``(B, L, K)`` psum vs request-side all-to-all token routing.  The
+    derived column carries each batch's **measured bytes moved** between
+    shards and the a2a row reports its reduction vs psum (the ISSUE 4
+    acceptance number);
   * ``engine_*``  — end-to-end through the micro-batching engine (queueing,
     bucketing, the one-buffer H2D transfer included), p50 per-request
-    latency; the sharded engine row also *asserts* the one-H2D-per-batch
-    contract via the engine's transfer counter.
+    latency; the sharded engine rows also *assert* the one-H2D-per-batch
+    contract and that the comm-bytes meter ran.
 
 Derived column: docs/s + tokens/s for the fold-in rows, p50 ms for the
 engine rows.  NOTE: off-TPU the pallas rows time the *interpreter* and the
 sharded rows time host-platform devices — they validate the paths end to
-end; the on-chip win is a hardware number.
+end; the on-chip win is a hardware number.  The bytes-moved numbers are
+shape-true on any platform.
+
+``--json PATH`` additionally records every row as JSON (the CI bench-smoke
+job uploads it as a workflow artifact); ``--tiny`` shrinks the sweep to a
+seconds-scale CI config.
 """
+import dataclasses
+
 import numpy as np
 
 from .common import emit, timeit
 
 IMPLS = ("xla", "pallas", "ref")
 
+_ROWS: list | None = None   # row recorder for --json
 
-def _engine_storm(snap, infer_cfg, L, rng, tag, check_h2d=False):
+
+def _emit(name: str, us: float, derived: str, **extra):
+    emit(name, us, derived)
+    if _ROWS is not None:
+        _ROWS.append(dict(name=name, us_per_call=round(us, 1),
+                          derived=derived, **extra))
+
+
+def _engine_storm(snap, infer_cfg, L, rng, tag, n_docs=64, check_h2d=False):
     from repro.serve import EngineConfig, HotSwapModel, LDAServeEngine
 
     V = snap.num_words
     model = HotSwapModel(snap)
     eng = LDAServeEngine(model, EngineConfig(
         max_batch=32, max_delay_ms=2.0, length_buckets=(L,), infer=infer_cfg))
-    docs = [rng.integers(0, V, L).astype(np.int32) for _ in range(64)]
+    docs = [rng.integers(0, V, L).astype(np.int32) for _ in range(n_docs)]
     eng.infer(docs[0])  # warm compile
     eng.infer_many(docs)
     s = eng.stats()
     if check_h2d:
         # the packed-buffer contract: exactly one H2D transfer per batch
         assert s["h2d_transfers"] == s["batches"], s
-    emit(tag, s["p50_ms"] * 1e3,
-         f"p99={s['p99_ms']:.1f}ms {s['docs_per_sec']:.0f} docs/s "
-         f"h2d/batch={s['h2d_transfers'] / max(s['batches'], 1):.0f}")
+    _emit(tag, s["p50_ms"] * 1e3,
+          f"p99={s['p99_ms']:.1f}ms {s['docs_per_sec']:.0f} docs/s "
+          f"h2d/batch={s['h2d_transfers'] / max(s['batches'], 1):.0f} "
+          f"comm_bytes={s['comm_bytes_moved']:.0f}",
+          comm_bytes=s["comm_bytes_moved"])
     eng.stop()
+    return s
 
 
-def run(impls=IMPLS):
+def run(impls=IMPLS, tiny=False):
     import jax
     from repro.serve import ModelSnapshot, shard_snapshot
-    from repro.serve.infer import InferConfig, fold_in, fold_in_sharded
+    from repro.serve.infer import (InferConfig, fold_in, fold_in_sharded,
+                                   routing_plan)
 
-    V, L = 2000, 64
+    V, L = (400, 32) if tiny else (2000, 64)
     rng = np.random.default_rng(0)
-    infer = InferConfig(burn_in=6, samples=3)
-    n_shards = min(jax.local_device_count(), 4)
+    infer = InferConfig(burn_in=2 if tiny else 6, samples=2 if tiny else 3)
+    n_shards = min(jax.local_device_count(), 8)
 
-    for K in (64, 256):
+    for K in ((32,) if tiny else (64, 256)):
         # synthetic frozen model with a plausible count profile
         phi = rng.integers(0, 50, (V, K)).astype(np.int32)
         snap = ModelSnapshot(
@@ -65,10 +88,14 @@ def run(impls=IMPLS):
             alpha=50.0 / K, beta=0.01, num_words_total=V)
         sharded = shard_snapshot(snap, n_shards)
 
-        for B in (1, 8, 32):
+        for B in ((8,) if tiny else (1, 8, 32)):
             tokens = rng.integers(0, V, (B, L)).astype(np.int32)
             mask = np.ones((B, L), bool)
             key = jax.random.key(0)
+
+            def _tok_rate(us):
+                return (f"{B / (us / 1e6):.0f} docs/s "
+                        f"{B * L / (us / 1e6):.0f} tok/s")
 
             for impl in impls:
                 def call(t=tokens, m=mask, s=snap, i=impl):
@@ -78,36 +105,75 @@ def run(impls=IMPLS):
                         samples=infer.samples, top_k=8, impl=i)
 
                 us = timeit(call, warmup=2, iters=3)
-                emit(f"foldin_{impl}_K{K}_B{B}", us,
-                     f"{B / (us / 1e6):.0f} docs/s "
-                     f"{B * L / (us / 1e6):.0f} tok/s")
+                _emit(f"foldin_{impl}_K{K}_B{B}", us, _tok_rate(us))
 
-            # the V-sharded gather (local gather + psum) on the same point
-            def call_sh(t=tokens, m=mask):
-                return fold_in_sharded(sharded, t, m, key, infer)
+            # the V-sharded gather on the same point, both comm strategies;
+            # the bytes-moved columns are measured per batch from the
+            # routing plan (capacity reflects this batch's actual
+            # token->shard distribution)
+            plan = routing_plan(sharded, tokens, mask)
+            for comm, tag, moved in (("psum", "psum", plan.psum_bytes),
+                                     ("all2all", "a2a", plan.a2a_bytes)):
+                cfg = dataclasses.replace(infer, comm=comm)
+                # capacity precomputed, as the engine does — the timed call
+                # must not replan the routing host-side every iteration
+                cap = plan.capacity if comm == "all2all" else None
 
-            us = timeit(call_sh, warmup=2, iters=3)
-            emit(f"foldin_shard{n_shards}_K{K}_B{B}", us,
-                 f"{B / (us / 1e6):.0f} docs/s "
-                 f"{B * L / (us / 1e6):.0f} tok/s")
+                def call_sh(t=tokens, m=mask, c=cfg, cp=cap):
+                    return fold_in_sharded(sharded, t, m, key, c, capacity=cp)
 
-        # end-to-end engine path at the largest batch point, both layouts;
-        # the sharded row doubles as the one-H2D-per-batch probe
-        _engine_storm(snap, infer, L, rng, f"engine_K{K}", check_h2d=True)
-        _engine_storm(sharded, infer, L, rng,
-                      f"engine_shard{n_shards}_K{K}", check_h2d=True)
+                us = timeit(call_sh, warmup=2, iters=3)
+                extra = ""
+                if comm == "all2all" and plan.a2a_bytes:
+                    extra = (f" bytes_vs_psum="
+                             f"{plan.psum_bytes / max(plan.a2a_bytes, 1):.1f}x")
+                _emit(f"foldin_shard{n_shards}_{tag}_K{K}_B{B}", us,
+                      _tok_rate(us) + f" bytes_moved={moved}" + extra,
+                      bytes_moved=moved, num_shards=n_shards)
+
+        # end-to-end engine path at the largest batch point, dense + both
+        # sharded strategies; the sharded rows double as the
+        # one-H2D-per-batch probe and exercise the comm-bytes meter
+        n_docs = 16 if tiny else 64
+        _engine_storm(snap, infer, L, rng, f"engine_K{K}", n_docs,
+                      check_h2d=True)
+        for comm, tag in (("psum", "psum"), ("all2all", "a2a")):
+            cfg = dataclasses.replace(infer, comm=comm)
+            s = _engine_storm(sharded, cfg, L, rng,
+                              f"engine_shard{n_shards}_{tag}_K{K}", n_docs,
+                              check_h2d=True)
+            # the meter must have run whenever shards actually exchanged data
+            assert n_shards == 1 or s["comm_bytes_moved"] > 0, s
 
 
 def main(argv=None) -> int:
     """Standalone entry: ``python -m benchmarks.serving --impl pallas``."""
     import argparse
+    import json
+
+    global _ROWS
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--impl", nargs="+", choices=IMPLS, default=list(IMPLS),
                     help="fold-in implementation(s) to time")
+    ap.add_argument("--tiny", action="store_true",
+                    help="seconds-scale sweep for the CI bench-smoke job")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write every row as JSON (CI artifact)")
     args = ap.parse_args(argv)
+    if args.json:
+        _ROWS = []
     print("name,us_per_call,derived")
-    run(impls=tuple(args.impl))
+    run(impls=tuple(args.impl), tiny=args.tiny)
+    if args.json:
+        import jax
+
+        with open(args.json, "w") as f:
+            json.dump({"bench": "serving", "tiny": args.tiny,
+                       "jax": jax.__version__,
+                       "devices": jax.local_device_count(),
+                       "rows": _ROWS}, f, indent=1)
+        print(f"# wrote {len(_ROWS)} rows to {args.json}")
     return 0
 
 

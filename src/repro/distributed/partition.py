@@ -58,6 +58,141 @@ _CORPUS_FIELDS = ("tile_word", "token_doc", "token_mask", "tile_first",
                   "doc_length", "doc_global", "token_uid")
 
 
+# ---------------------------------------------------------------------------
+# request-side token routing (V-sharded serving, comm="all2all")
+# ---------------------------------------------------------------------------
+# The V-sharded fold-in's original gather assembles the (B, L, K) int32 phi
+# rows with a full psum — comm volume B*L*K per device regardless of how many
+# tokens the batch actually holds.  Request-side routing moves only what the
+# tokens need: each shard takes a contiguous slice of the batch's documents
+# ("requester" role), buckets its real tokens' ids by owning shard (the same
+# word->shard maps the LPT vocabulary partition builds), all_to_all's the
+# (much smaller) id lists, the owners local-gather their phi rows, and a
+# second all_to_all returns the (n_tok, K) rows into batch order.  The
+# fold-in sweeps then run on each shard's doc slice only; per-doc results are
+# all_gather'd at the end.  Comm scales with tokens routed, not B*L*K.
+
+
+def doc_slice_bounds(num_docs: int, num_shards: int):
+    """Contiguous per-shard document slices covering [0, num_docs).
+
+    Every shard gets the same static slice width ``Bs = ceil(B/S)`` (SPMD
+    needs equal shapes); when B is not divisible the trailing slices are
+    clamped to ``B - Bs`` and overlap — duplicated docs are computed twice
+    and deduplicated at assembly (``doc_slice_owner``), which keeps draws
+    bit-identical for *any* batch size.
+
+    Returns (starts (S,) int32, Bs)."""
+    if num_docs < 1 or num_shards < 1:
+        raise ValueError("num_docs and num_shards must be >= 1")
+    per = -(-num_docs // num_shards)   # ceil
+    starts = np.minimum(np.arange(num_shards, dtype=np.int64) * per,
+                        num_docs - per)
+    return starts.astype(np.int32), int(per)
+
+
+def doc_slice_owner(num_docs: int, num_shards: int):
+    """Deduplication map for overlapping slices: for each doc, the shard
+    whose slice "officially" covers it plus its row within that slice.
+
+    Returns (owner (B,) int64, row (B,) int64)."""
+    starts, per = doc_slice_bounds(num_docs, num_shards)
+    d = np.arange(num_docs, dtype=np.int64)
+    owner = np.minimum(d // per, num_shards - 1)
+    return owner, d - starts[owner]
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenRoutingPlan:
+    """Host-side routing plan for one (tokens, mask) batch.
+
+    ``capacity`` is the static per-(requester, owner) bucket size the traced
+    routing uses — the measured max bucket load rounded up to a power of two
+    (bounded recompiles per shape bucket), clamped to the slice size so it
+    can never be exceeded.  The byte counters are *measured* for this batch
+    (they depend on the actual token->shard distribution through
+    ``capacity``), summed over the whole mesh, counting only off-device
+    traffic (the all_to_all diagonal stays local)."""
+
+    num_shards: int
+    docs_per_shard: int      # Bs — static doc-slice width
+    capacity: int            # per (requester, owner) bucket slots
+    routed_tokens: int       # real (unmasked) tokens routed, duplicates incl.
+    a2a_bytes: int           # ids + rows all_to_all + per-doc result gather
+    psum_bytes: int          # what the dense (B, L, K) psum would have moved
+
+
+def _next_pow2(n: int) -> int:
+    return 1 if n <= 1 else 1 << (int(n - 1).bit_length())
+
+
+def psum_gather_bytes(batch: int, length: int, num_topics: int,
+                      num_shards: int) -> int:
+    """Off-device bytes a ring all-reduce of the (B, L, K) int32 gathered
+    rows moves across the whole mesh (reduce-scatter + all-gather)."""
+    return 4 * 2 * (num_shards - 1) * batch * length * num_topics
+
+
+def plan_token_routing(word_shard_of: np.ndarray, tokens: np.ndarray,
+                       mask: np.ndarray, num_shards: int,
+                       num_topics: int) -> TokenRoutingPlan:
+    """Measure one batch's routing load and fix the static bucket capacity.
+
+    ``word_shard_of`` is the snapshot's (V,) word->shard map (LPT-balanced
+    for trainer-published snapshots, contiguous for re-split dense ones)."""
+    tokens = np.asarray(tokens)
+    mask = np.asarray(mask, bool)
+    B, L = tokens.shape
+    S = int(num_shards)
+    shard_of = np.asarray(word_shard_of)
+    starts, per = doc_slice_bounds(B, S)
+
+    max_bucket, routed = 0, 0
+    for s in range(S):
+        sl = slice(int(starts[s]), int(starts[s]) + per)
+        owners = shard_of[tokens[sl][mask[sl]]]
+        routed += owners.size
+        if owners.size:
+            max_bucket = max(max_bucket,
+                             int(np.bincount(owners, minlength=S).max()))
+    capacity = min(_next_pow2(max(max_bucket, 1)), per * L)
+
+    K = int(num_topics)
+    off = S * (S - 1)   # (src, dst) pairs that actually cross devices
+    a2a = 4 * (off * capacity              # token-id request lists
+               + off * capacity * K        # gathered rows coming back
+               + off * (per * K + 2 * per))  # per-doc theta/sp/ssq gather
+    return TokenRoutingPlan(
+        num_shards=S, docs_per_shard=per, capacity=capacity,
+        routed_tokens=routed, a2a_bytes=a2a,
+        psum_bytes=psum_gather_bytes(B, L, K, S))
+
+
+def route_buckets(owner: Array, payload: Array, num_shards: int,
+                  capacity: int):
+    """Traced bucketing of a flat token stream by owning shard (the
+    shard_map-side half of the routing plan).
+
+    ``owner`` (T,) holds each slot's owning shard, or ``num_shards`` for
+    slots that route nowhere (padding).  ``payload`` (T,) is what travels
+    (local phi-row ids).  Returns (send (S, C) payload buckets, src (S, C)
+    flat source position per slot, T where the slot is empty) — slots the
+    plan's capacity guarantees are never dropped for real tokens."""
+    T = owner.shape[0]
+    order = jnp.argsort(owner)                    # stable in jax.numpy
+    sorted_owner = owner[order]
+    first = jnp.searchsorted(sorted_owner,
+                             jnp.arange(num_shards, dtype=owner.dtype))
+    rank = jnp.arange(T, dtype=jnp.int32) - first[
+        jnp.clip(sorted_owner, 0, num_shards - 1)].astype(jnp.int32)
+    send = jnp.zeros((num_shards, capacity), jnp.int32).at[
+        sorted_owner, rank].set(payload[order].astype(jnp.int32),
+                                mode="drop")
+    src = jnp.full((num_shards, capacity), T, jnp.int32).at[
+        sorted_owner, rank].set(order.astype(jnp.int32), mode="drop")
+    return send, src
+
+
 @dataclasses.dataclass(frozen=True)
 class PartitionPlan:
     """Static description of how the corpus was laid onto the mesh."""

@@ -23,11 +23,33 @@ import jax.numpy as jnp
 from . import kernel, ref
 
 
-def fold_in_sweeps(
-    phi_tok,       # (B, L, K) int32 — gathered phi rows of the request tokens
+def draw_fold_in_randoms(key, batch: int, length: int, num_topics: int,
+                         n_sweeps: int):
+    """The fold-in's entire randomness budget, drawn up front.
+
+    Same split tree as the XLA serving path (init key -> z0; one key per
+    sweep -> a (B, L, 2) uniform block), so every consumer of these arrays
+    is draw-identical to it.  Drawing at full batch shape and *slicing* is
+    how the V-sharded all2all path keeps bit-identity while each shard
+    sweeps only its doc slice: counter-based PRNG values depend on the draw
+    shape, so a (Bs, L) draw would differ from rows of the (B, L) draw.
+
+    Returns (z0 (B, L) int32, uniforms (n_sweeps, B, L, 2) float32)."""
+    k_init, k_sweeps = jax.random.split(key)
+    z0 = jax.random.randint(k_init, (batch, length), 0, num_topics,
+                            jnp.int32)
+    keys = jax.random.split(k_sweeps, n_sweeps)
+    uniforms = jax.vmap(
+        lambda k: jax.random.uniform(k, (batch, length, 2), jnp.float32))(keys)
+    return z0, uniforms
+
+
+def fold_in_sweeps_drawn(
+    phi_tok,       # (b, L, K) int32 — gathered phi rows (b may be a slice)
     phi_sum,       # (K,) int32
-    mask,          # (B, L) bool
-    key,
+    mask,          # (b, L) bool
+    z0,            # (b, L) int32 — pre-drawn initial assignments
+    uniforms,      # (n_sweeps, b, L, 2) float32 — pre-drawn per-sweep draws
     alpha,         # traced scalars (hot-swap without recompiling)
     beta,
     *,
@@ -38,26 +60,42 @@ def fold_in_sweeps(
     impl: str = "pallas",
     interpret: bool = True,
 ):
-    """Run all fold-in sweeps; returns per-doc partials over the kept sweeps:
-    (theta_sum (B, K) int32, sparse_draws (B,) int32, ssq_sum (B,) float32).
-    """
-    B, L = mask.shape
-    K = phi_sum.shape[0]
-
-    # identical randomness to the XLA path: same split tree, same draws
-    k_init, k_sweeps = jax.random.split(key)
-    z0 = jax.random.randint(k_init, (B, L), 0, K, jnp.int32)
-    keys = jax.random.split(k_sweeps, burn_in + samples)
-    uniforms = jax.vmap(
-        lambda k: jax.random.uniform(k, (B, L, 2), jnp.float32))(keys)
-    uniforms = jnp.swapaxes(uniforms, 0, 1)               # (B, n_sweeps, L, 2)
-
+    """The sweeps on pre-drawn randomness; returns per-doc partials over the
+    kept sweeps: (theta_sum (b, K) int32, sparse_draws (b,) int32,
+    ssq_sum (b,) float32)."""
     phi_tok = phi_tok.astype(jnp.int32)
     hyper = jnp.stack([jnp.float32(alpha), jnp.float32(beta)])
-    args = (phi_tok, phi_sum.astype(jnp.int32), hyper, uniforms,
+    args = (phi_tok, phi_sum.astype(jnp.int32), hyper,
+            jnp.swapaxes(uniforms, 0, 1),                 # (b, n_sweeps, L, 2)
             mask.astype(jnp.int32), z0)
     kw = dict(num_words_total=num_words_total, burn_in=burn_in,
               samples=samples, ell_capacity=ell_capacity)
     if impl == "pallas":
         return kernel.fold_in_docs(*args, interpret=interpret, **kw)
     return ref.fold_in_docs_ref(*args, **kw)
+
+
+def fold_in_sweeps(
+    phi_tok,       # (B, L, K) int32 — gathered phi rows of the request tokens
+    phi_sum,       # (K,) int32
+    mask,          # (B, L) bool
+    key,
+    alpha,
+    beta,
+    *,
+    num_words_total: int,
+    burn_in: int,
+    samples: int,
+    ell_capacity: int,
+    impl: str = "pallas",
+    interpret: bool = True,
+):
+    """Run all fold-in sweeps from a PRNG key; returns the per-doc partials
+    of ``fold_in_sweeps_drawn``."""
+    B, L = mask.shape
+    z0, uniforms = draw_fold_in_randoms(key, B, L, phi_sum.shape[0],
+                                        burn_in + samples)
+    return fold_in_sweeps_drawn(
+        phi_tok, phi_sum, mask, z0, uniforms, alpha, beta,
+        num_words_total=num_words_total, burn_in=burn_in, samples=samples,
+        ell_capacity=ell_capacity, impl=impl, interpret=interpret)

@@ -51,6 +51,15 @@ def build_argparser() -> argparse.ArgumentParser:
                          "devices; a dense snapshot is re-split at load, a "
                          ".sharded directory keeps its own layout (0/1 = "
                          "unsharded)")
+    ap.add_argument("--comm", choices=("auto", "psum", "all2all"),
+                    default="auto",
+                    help="V-sharded gather strategy: 'psum' assembles the "
+                         "(B, L, K) rows with a full psum, 'all2all' routes "
+                         "only the batch's token ids to the owning shards "
+                         "and moves the gathered rows back (comm scales "
+                         "with tokens, not B*L*K), 'auto' uses the "
+                         "snapshot's own tag; draws are bit-identical "
+                         "either way")
     # bench-mode training knobs
     ap.add_argument("--topics", type=int, default=32)
     ap.add_argument("--train-iters", type=int, default=25)
@@ -65,7 +74,8 @@ def load_model(args, path: str | None = None):
     from repro.serve import load_any_snapshot
 
     return load_any_snapshot(path or args.snapshot,
-                             shards=max(args.shards, 0))
+                             shards=max(args.shards, 0),
+                             comm=None if args.comm == "auto" else args.comm)
 
 
 def make_engine(args, snap):
@@ -76,7 +86,7 @@ def make_engine(args, snap):
         max_batch=args.max_batch, max_delay_ms=args.delay_ms,
         length_buckets=tuple(args.length_buckets),
         infer=InferConfig(burn_in=args.burn_in, samples=args.samples,
-                          top_k=args.top_k, impl=args.impl))
+                          top_k=args.top_k, impl=args.impl, comm=args.comm))
     return model, LDAServeEngine(model, cfg, seed=args.seed)
 
 
@@ -120,7 +130,7 @@ def run_bench(args) -> int:
         corpus, _, _ = _train_and_export(args)
         print(f"[bench] trained + exported in {time.perf_counter() - t0:.1f}s")
     snap = load_model(args)
-    layout = (f"V-sharded x{snap.num_shards}"
+    layout = (f"V-sharded x{snap.num_shards} (comm={snap.comm})"
               if isinstance(snap, ShardedModelSnapshot) else "dense")
     print(f"[bench] snapshot: V={snap.num_words} K={snap.num_topics} "
           f"iteration={snap.meta.get('iteration')} phi={layout}")

@@ -18,6 +18,10 @@ Device traffic: each batch crosses the host->device boundary exactly once —
 tokens, per-doc lengths, and the batch PRNG seed are packed into a single
 pinned int32 buffer (``pack_request_buffer``), mask and key are derived on
 device.  ``stats()['h2d_transfers']`` counts those transfers (== batches).
+For sharded snapshots the worker also resolves the comm strategy
+(psum vs request-side all2all), plans the all2all bucket capacity from the
+host-side batch, and meters the measured inter-shard traffic in
+``stats()['comm_bytes_moved']``.
 
 Latency accounting is end-to-end per request (submit -> result ready);
 ``stats()`` reports p50/p99 and docs/sec over the recorded window, with the
@@ -37,8 +41,9 @@ from typing import Any, Sequence
 import numpy as np
 import jax
 
-from repro.serve.infer import (InferConfig, fold_in_request,
-                               pack_request_buffer, serve_cache_size)
+from repro.serve.infer import (InferConfig, _host_batch_from_buffer,
+                               fold_in_request, pack_request_buffer,
+                               resolve_comm, routing_plan, serve_cache_size)
 from repro.serve.snapshot import HotSwapModel, ShardedModelSnapshot
 
 _SENTINEL = object()
@@ -95,6 +100,7 @@ class LDAServeEngine:
         self._batches_done = 0
         self._errors = 0
         self._h2d_transfers = 0
+        self._comm_bytes = 0   # measured inter-shard bytes (sharded phi only)
         self._t_first: float | None = None
         self._t_last: float | None = None
         self._rng = np.random.default_rng(seed)
@@ -186,12 +192,14 @@ class LDAServeEngine:
             mean_b = float(np.mean(self._batch_sizes)) if self._batch_sizes else 0.0
             batches = self._batches_done
             h2d = self._h2d_transfers
+            comm_bytes = self._comm_bytes
         return dict(
             requests=float(n),
             errors=float(errors),
             batches=float(batches),
             mean_batch=mean_b,
             h2d_transfers=float(h2d),
+            comm_bytes_moved=float(comm_bytes),
             p50_ms=float(np.percentile(lat, 50)) if lat.size else 0.0,
             p99_ms=float(np.percentile(lat, 99)) if lat.size else 0.0,
             docs_per_sec=(n / span) if span > 0 else 0.0,
@@ -280,8 +288,24 @@ class LDAServeEngine:
         L = _bucket(max(len(r.tokens) for r in batch), cfg.length_buckets)
         seed = int(self._rng.integers(2**31))
         packed = pack_request_buffer([r.tokens for r in batch], B, L, seed)
+
+        # Sharded phi: plan the all2all routing host-side from the packed
+        # batch (no extra D2H) and meter the strategy's inter-shard bytes.
+        capacity = None
+        if isinstance(snap, ShardedModelSnapshot):
+            from repro.distributed.partition import psum_gather_bytes
+
+            if resolve_comm(snap, cfg.infer) == "all2all":
+                plan = routing_plan(snap, *_host_batch_from_buffer(packed))
+                capacity, moved = plan.capacity, plan.a2a_bytes
+            else:
+                moved = psum_gather_bytes(B, L, snap.num_topics,
+                                          snap.num_shards)
+            with self._lock:
+                self._comm_bytes += moved
+
         buf = self._to_device(packed, snap)        # ONE H2D for the batch
-        res = fold_in_request(snap, buf, cfg.infer)
+        res = fold_in_request(snap, buf, cfg.infer, capacity=capacity)
         theta = np.asarray(res.theta)
         tt = np.asarray(res.top_topics)
         tw = np.asarray(res.top_weights)

@@ -35,12 +35,15 @@ given the same key — same split tree, same uniforms):
 Everything downstream of the per-token gather consumes only the gathered
 ``(B, L, K)`` phi rows (``_fold_in_rows``), never the full ``(V, K)`` phi.
 That factoring is what makes **V-sharded serving** possible: for a
-``ShardedModelSnapshot`` the gather runs inside ``shard_map`` — each device
+``ShardedModelSnapshot`` the gather runs inside ``shard_map`` under one of
+two comm strategies (``InferConfig.comm``): ``"psum"`` — each device
 gathers the rows of the word ids *its* phi block owns (zeros elsewhere) and
-a ``psum`` over the shard axis assembles the exact int32 rows — after which
-the identical replicated sweep code (XLA scan or the Pallas kernel, which
-only ever sees the gathered rows) produces draws bit-identical to the
-single-device path under the same key.
+a ``psum`` over the shard axis assembles the exact int32 rows — or
+``"all2all"`` — request-side token routing, where each shard sweeps only a
+contiguous doc slice and moves just the routed token ids + their rows over
+the mesh (see the V-sharded section below).  Either way the sweep code
+(XLA scan or the Pallas kernel, which only ever sees the gathered rows)
+produces draws bit-identical to the single-device path under the same key.
 """
 from __future__ import annotations
 
@@ -67,6 +70,16 @@ class InferConfig:
     top_k: int = 8
     ell_capacity: int | None = None  # P; None -> min(L, K)
     impl: str = "xla"                # "xla" | "pallas" | "ref"
+    # How a V-sharded snapshot assembles the per-token phi rows:
+    #   "psum"    — every shard gathers its owned rows at full (B, L, K) and
+    #               a psum assembles them (comm volume B*L*K per device);
+    #   "all2all" — request-side token routing: each shard sweeps a doc
+    #               slice, routes only its real tokens' ids to the owning
+    #               shards and gets the (n_tok, K) rows back via all_to_all
+    #               (comm scales with tokens routed, not B*L*K);
+    #   "auto"    — defer to the snapshot's own ``comm`` tag.
+    # Draws are bit-identical across all strategies (and to the dense path).
+    comm: str = "auto"               # "auto" | "psum" | "all2all"
 
 
 class FoldInResult(NamedTuple):
@@ -284,40 +297,109 @@ def fold_in_buffer(
 
 
 # ---------------------------------------------------------------------------
-# V-sharded fold-in: phi partitioned over a mesh axis, gather via psum
+# V-sharded fold-in: phi partitioned over a mesh axis
 # ---------------------------------------------------------------------------
+# Two comm strategies assemble the per-token phi rows (InferConfig.comm):
+#
+# * "psum"    — every shard gathers the rows of the word ids its block owns
+#   (zeros elsewhere) at full (B, L, K) and a psum over the shard axis
+#   assembles the exact int32 rows; the sweeps then run replicated.  Simple,
+#   but the psum moves B*L*K int32 per device however few tokens the batch
+#   really holds.
+#
+# * "all2all" — request-side token routing.  Each shard takes a contiguous
+#   slice of the batch's docs, buckets its *real* tokens' local-row ids by
+#   owning shard (``route_buckets``), all_to_all's the id lists, the owners
+#   local-gather their phi rows, and a second all_to_all returns the
+#   (n_tok, K) rows into batch order.  The sweeps then run on the doc slice
+#   only (randoms drawn full-shape and sliced, so draws stay bit-identical),
+#   and per-doc partials are all_gather'd.  Comm scales with tokens actually
+#   routed — and the sweep compute is sharded S-ways for free.
+#
+# Both are bit-identical to the dense path under the same key for every impl.
 
 _SHARDED_JITS: list = []   # every built sharded jit, for cache-size probes
+
+
+def _sweeps_xla_drawn(phi_tok, phi_sum, mask, z0, uniforms, alpha, beta, *,
+                      num_words_total: int, burn_in: int, samples: int,
+                      ell_capacity: int):
+    """Per-doc-partials variant of the XLA scan in ``_fold_in_rows``,
+    consuming pre-drawn randomness.
+
+    The all2all path sweeps only a doc slice, so z0/uniforms are drawn at
+    full batch shape outside and sliced — every op here is per-doc or
+    per-token, so the sliced rows evolve bit-identically to the same rows of
+    the dense scan.  Returns (theta_sum (b, K) int32, sparse (b,) int32,
+    ssq (b,) float32)."""
+    b, L = mask.shape
+    K = phi_sum.shape[0]
+    P = ell_capacity
+    pstar_tok = sampler.pstar(phi_tok, phi_sum, beta, num_words_total)
+    Q = alpha * pstar_tok.sum(-1)
+    flat_pstar = pstar_tok.reshape(b * L, K)
+
+    def sweep(carry, u):
+        z, theta = carry
+        counts, topics = jax.lax.top_k(theta, P)
+        gat = jnp.broadcast_to(topics[:, None, :], (b, L, P))
+        p1 = counts[:, None, :].astype(jnp.float32) * jnp.take_along_axis(
+            pstar_tok, gat, axis=-1)
+        p1_cum = jnp.cumsum(p1, axis=-1)
+        S = p1_cum[..., -1]
+        use_sparse = u[..., 0] * (S + Q) < S
+        t_sparse = (u[..., 1] * S)[..., None]
+        j = jnp.minimum((p1_cum <= t_sparse).sum(-1), P - 1)
+        k_sparse = jnp.take_along_axis(topics, j.reshape(b, L), axis=1)
+        k_dense = jax.vmap(sampler.blocked_search)(
+            flat_pstar, u[..., 1].reshape(b * L, 1))[:, 0].reshape(b, L)
+        z_new = jnp.where(use_sparse, k_sparse, k_dense).astype(jnp.int32)
+        z_new = jnp.where(mask, z_new, z)
+        theta_new = _theta_counts(z_new, mask, K)
+        sp = (use_sparse & mask).astype(jnp.int32).sum(-1)         # (b,)
+        ssq = jnp.where(mask, S / jnp.maximum(S + Q, 1e-30), 0.0).sum(-1)
+        return (z_new, theta_new), (theta_new, sp, ssq)
+
+    carry = (z0, _theta_counts(z0, mask, K))
+    carry, _ = jax.lax.scan(sweep, carry, uniforms[:burn_in])
+    _, (thetas, sps, ssqs) = jax.lax.scan(sweep, carry, uniforms[burn_in:])
+    return thetas.sum(0), sps.sum(0), ssqs.sum(0)
 
 
 @functools.lru_cache(maxsize=None)
 def _sharded_fold_in_fns(mesh, axis: str, num_words_total: int, burn_in: int,
                          samples: int, top_k: int, ell_capacity: int | None,
-                         impl: str, interpret: bool | None):
-    """Build (and cache per mesh + schedule) the shard_map'd fold-in.
+                         impl: str, interpret: bool | None,
+                         comm: str = "psum", capacity: int | None = None):
+    """Build (and cache per mesh + schedule + comm strategy) the shard_map'd
+    fold-in.
 
     Layout inside the map: each device holds one (Vs, K) phi block plus the
-    replicated (V,) word->shard / word->local-row maps.  The per-token
-    gather runs on the shard owning each word id — rows of foreign words are
-    zeros — and a ``psum`` over the shard axis assembles the exact int32
-    (B, L, K) rows, 1/S of the single-device gather traffic per device.
-    Everything after the psum is replicated compute through the same
-    ``_fold_in_rows`` as the dense path, so sharded serving is draw-identical
-    to single-device serving under the same key.
+    replicated (V,) word->shard / word->local-row maps; tokens, mask, key
+    and hyperparams are replicated.  ``comm`` picks the row-assembly
+    strategy (see module section comment); ``capacity`` is the all2all
+    plan's static per-(requester, owner) bucket size and is part of the
+    cache key (power-of-two bucketed by the plan, so recompiles stay
+    bounded).
 
-    Returns ``(run_tokens, run_buffer)`` jitted entry points.
+    Returns ``(run_tokens, run_buffer)`` jitted entry points; both
+    strategies are draw-identical to the single-device path under the same
+    key.
     """
     from jax.sharding import PartitionSpec as P
 
-    from repro.distributed.partition import shard_map_compat
+    from repro.distributed.partition import (doc_slice_bounds,
+                                             doc_slice_owner, route_buckets,
+                                             shard_map_compat)
 
     kw = dict(num_words_total=num_words_total, burn_in=burn_in,
               samples=samples, top_k=top_k, ell_capacity=ell_capacity,
               impl=impl, interpret=interpret)
     repl = P()
+    num_shards = int(mesh.shape[axis])
 
-    def inner(phi_blk, phi_sum, shard_of, local_id, tokens, mask, key_data,
-              hyper):
+    def inner_psum(phi_blk, phi_sum, shard_of, local_id, tokens, mask,
+                   key_data, hyper):
         s = jax.lax.axis_index(axis)
         tok_shard = shard_of[tokens]                       # (B, L)
         mine = tok_shard == s
@@ -328,6 +410,67 @@ def _sharded_fold_in_fns(mesh, axis: str, num_words_total: int, burn_in: int,
         return _fold_in_rows(phi_tok, phi_sum, mask, key, hyper[0], hyper[1],
                              **kw)
 
+    def inner_a2a(phi_blk, phi_sum, shard_of, local_id, tokens, mask,
+                  key_data, hyper):
+        S = num_shards
+        B, L = tokens.shape
+        K = phi_sum.shape[0]
+        # slice policy + overlap-dedup map as trace-time constants, from the
+        # one place that owns them (distributed.partition)
+        starts_np, Bs = doc_slice_bounds(B, S)
+        own_np, row_np = doc_slice_owner(B, S)
+        T = Bs * L
+        s = jax.lax.axis_index(axis)
+        start = jnp.asarray(starts_np)[s]
+
+        # --- route: ids out, rows back -----------------------------------
+        tok_s = jax.lax.dynamic_slice_in_dim(tokens, start, Bs, 0)
+        msk_s = jax.lax.dynamic_slice_in_dim(mask, start, Bs, 0)
+        flat_tok = tok_s.reshape(T)
+        owner = jnp.where(msk_s.reshape(T), shard_of[flat_tok],
+                          S).astype(jnp.int32)             # padding: nowhere
+        send_ids, src = route_buckets(owner, local_id[flat_tok], S, capacity)
+        recv_ids = jax.lax.all_to_all(send_ids, axis, 0, 0)   # requests in
+        rows = phi_blk[0][recv_ids]                 # (S, C, K) local gather
+        rows_back = jax.lax.all_to_all(rows, axis, 0, 0)      # rows home
+        phi_tok_s = jnp.zeros((T, K), jnp.int32).at[src.reshape(-1)].set(
+            rows_back.reshape(-1, K), mode="drop").reshape(Bs, L, K)
+
+        # --- sweep the doc slice (full-shape randoms, sliced) ------------
+        from repro.kernels.fold_in import ops as foldin_ops
+
+        key = jax.random.wrap_key_data(key_data)
+        z0, uniforms = foldin_ops.draw_fold_in_randoms(
+            key, B, L, K, burn_in + samples)
+        z0_s = jax.lax.dynamic_slice_in_dim(z0, start, Bs, 0)
+        uni_s = jax.lax.dynamic_slice_in_dim(uniforms, start, Bs, 1)
+        P_ell = min(ell_capacity or L, L, K)
+        if impl == "xla":
+            tsum, sp, ssq = _sweeps_xla_drawn(
+                phi_tok_s, phi_sum, msk_s, z0_s, uni_s, hyper[0], hyper[1],
+                num_words_total=num_words_total, burn_in=burn_in,
+                samples=samples, ell_capacity=P_ell)
+        else:
+            itp = interpret
+            if itp is None:
+                itp = jax.default_backend() != "tpu"
+            tsum, sp, ssq = foldin_ops.fold_in_sweeps_drawn(
+                phi_tok_s, phi_sum, msk_s, z0_s, uni_s, hyper[0], hyper[1],
+                num_words_total=num_words_total, burn_in=burn_in,
+                samples=samples, ell_capacity=P_ell, impl=impl,
+                interpret=itp)
+
+        # --- assemble: per-doc partials home, overlap deduplicated -------
+        g_t = jax.lax.all_gather(tsum, axis)               # (S, Bs, K)
+        g_sp = jax.lax.all_gather(sp, axis)                # (S, Bs)
+        g_ssq = jax.lax.all_gather(ssq, axis)
+        own, row = jnp.asarray(own_np), jnp.asarray(row_np)
+        n_real = jnp.maximum(mask.sum(), 1).astype(jnp.float32)
+        return _assemble(g_t[own, row], g_sp[own, row].sum(),
+                         g_ssq[own, row].sum(), hyper[0], samples,
+                         min(top_k, K), n_real * samples)
+
+    inner = inner_a2a if comm == "all2all" else inner_psum
     mapped = shard_map_compat(
         inner, mesh=mesh,
         in_specs=(P(axis), repl, repl, repl, repl, repl, repl, repl),
@@ -348,31 +491,82 @@ def _sharded_fold_in_fns(mesh, axis: str, num_words_total: int, burn_in: int,
     return fns
 
 
-def _sharded_statics(snap, cfg: InferConfig, interpret: bool | None):
+def resolve_comm(snap, cfg: InferConfig) -> str:
+    """Effective comm strategy: the config's, or — on ``"auto"`` — the
+    snapshot's own ``comm`` tag (how "strategy per snapshot" is selected)."""
+    comm = cfg.comm
+    if comm in (None, "auto"):
+        comm = getattr(snap, "comm", "psum")
+    if comm not in ("psum", "all2all"):
+        raise ValueError(f"unknown comm strategy {comm!r} "
+                         "(expected 'psum', 'all2all' or 'auto')")
+    return comm
+
+
+def routing_plan(snap, tokens, mask):
+    """Host-side all2all routing plan for one batch against a sharded
+    snapshot: the static bucket capacity plus this batch's measured
+    bytes-moved under both comm strategies."""
+    from repro.distributed.partition import plan_token_routing
+
+    return plan_token_routing(snap.host_word_shard_of, np.asarray(tokens),
+                              np.asarray(mask), snap.num_shards,
+                              snap.num_topics)
+
+
+def _sharded_statics(snap, cfg: InferConfig, interpret: bool | None,
+                     comm: str = "psum", capacity: int | None = None):
     return (snap.mesh, snap.axis, snap.num_words_total, cfg.burn_in,
-            cfg.samples, cfg.top_k, cfg.ell_capacity, cfg.impl, interpret)
+            cfg.samples, cfg.top_k, cfg.ell_capacity, cfg.impl, interpret,
+            comm, capacity)
 
 
 def fold_in_sharded(snap, tokens, mask, key, cfg: InferConfig,
-                    interpret: bool | None = None) -> FoldInResult:
-    """Fold-in against a ``ShardedModelSnapshot`` (explicit tokens + key)."""
-    run_tokens, _ = _sharded_fold_in_fns(*_sharded_statics(snap, cfg,
-                                                           interpret))
+                    interpret: bool | None = None,
+                    capacity: int | None = None) -> FoldInResult:
+    """Fold-in against a ``ShardedModelSnapshot`` (explicit tokens + key).
+
+    Under ``comm="all2all"`` the routing capacity is planned host-side from
+    the batch unless the caller already did (``capacity``)."""
+    comm = resolve_comm(snap, cfg)
+    if comm == "all2all" and capacity is None:
+        capacity = routing_plan(snap, tokens, mask).capacity
+    run_tokens, _ = _sharded_fold_in_fns(
+        *_sharded_statics(snap, cfg, interpret, comm,
+                          capacity if comm == "all2all" else None))
     with snap.mesh:
         return run_tokens(snap.phi_blocks, snap.phi_sum, snap.word_shard_of,
                           snap.word_local_id, jnp.asarray(tokens, jnp.int32),
                           jnp.asarray(mask), key, snap.hyper)
 
 
+def _host_batch_from_buffer(buf):
+    """Packed request buffer -> host (tokens, mask) for routing plans."""
+    b = np.asarray(buf)
+    L = b.shape[1] - 1
+    tokens, lengths = b[:-1, :L], b[:-1, L]
+    return tokens, np.arange(L)[None, :] < lengths[:, None]
+
+
 def fold_in_request(snap, buf, cfg: InferConfig,
-                    interpret: bool | None = None) -> FoldInResult:
+                    interpret: bool | None = None,
+                    capacity: int | None = None) -> FoldInResult:
     """One engine batch from a packed request buffer, against either a dense
-    ``ModelSnapshot`` or a ``ShardedModelSnapshot`` (dispatch point)."""
+    ``ModelSnapshot`` or a ``ShardedModelSnapshot`` (dispatch point).
+
+    The engine plans the all2all capacity from its host-side copy of the
+    batch and passes it in; other callers pay one D2H copy of the (small)
+    buffer here."""
     from repro.serve.snapshot import ShardedModelSnapshot
 
     if isinstance(snap, ShardedModelSnapshot):
-        _, run_buffer = _sharded_fold_in_fns(*_sharded_statics(snap, cfg,
-                                                               interpret))
+        comm = resolve_comm(snap, cfg)
+        if comm == "all2all" and capacity is None:
+            capacity = routing_plan(snap, *_host_batch_from_buffer(buf)
+                                    ).capacity
+        _, run_buffer = _sharded_fold_in_fns(
+            *_sharded_statics(snap, cfg, interpret, comm,
+                              capacity if comm == "all2all" else None))
         with snap.mesh:
             return run_buffer(snap.phi_blocks, snap.phi_sum,
                               snap.word_shard_of, snap.word_local_id, buf,

@@ -108,6 +108,8 @@ class ShardedModelSnapshot:
     num_words_total: int
     mesh: Any                # jax.sharding.Mesh carrying the shard axis
     axis: str = "shards"
+    comm: str = "psum"       # default gather strategy ("psum" | "all2all");
+    #                          InferConfig(comm="auto") defers to this tag
     meta: dict = dataclasses.field(default_factory=dict)
     vocab: tuple[str, ...] | None = None
 
@@ -130,6 +132,12 @@ class ShardedModelSnapshot:
             np.asarray([self.alpha, self.beta], np.float32),
             jax.sharding.NamedSharding(self.mesh,
                                        jax.sharding.PartitionSpec()))
+
+    @functools.cached_property
+    def host_word_shard_of(self) -> np.ndarray:
+        """Host copy of the word->shard map, cached once per snapshot so the
+        engine can plan all2all routing per batch without a D2H transfer."""
+        return np.asarray(jax.device_get(self.word_shard_of))
 
     def assemble(self) -> ModelSnapshot:
         """Gather to a host-dense ModelSnapshot (tests / offline eval — the
@@ -265,7 +273,8 @@ def split_dense_phi(phi: np.ndarray, num_shards: int):
 
 def _sharded_from_blocks(blocks, phi_sum, shard_of, local_id, alpha, beta,
                          num_words_total, meta, vocab,
-                         mesh=None, axis: str = "shards") -> ShardedModelSnapshot:
+                         mesh=None, axis: str = "shards",
+                         comm: str = "psum") -> ShardedModelSnapshot:
     """Place host blocks onto the mesh: block s on shard-axis position s,
     maps + phi_sum replicated."""
     from jax.sharding import NamedSharding, PartitionSpec as P
@@ -284,23 +293,25 @@ def _sharded_from_blocks(blocks, phi_sum, shard_of, local_id, alpha, beta,
         word_local_id=jax.device_put(np.asarray(local_id, np.int32), repl),
         alpha=float(alpha), beta=float(beta),
         num_words_total=int(num_words_total), mesh=mesh, axis=axis,
-        meta=dict(meta or {}),
+        comm=str(comm), meta=dict(meta or {}),
         vocab=tuple(vocab) if vocab is not None else None)
 
 
 def shard_snapshot(snap: ModelSnapshot, num_shards: int,
-                   mesh=None) -> ShardedModelSnapshot:
+                   mesh=None, comm: str = "psum") -> ShardedModelSnapshot:
     """Split a dense snapshot into ``num_shards`` contiguous word blocks,
     each placed on its own mesh device (in-memory; no disk round-trip)."""
     blocks, shard_of, local_id = split_dense_phi(snap.phi_vk, num_shards)
     return _sharded_from_blocks(
         blocks, np.asarray(snap.phi_sum), shard_of, local_id, snap.alpha,
-        snap.beta, snap.num_words_total, snap.meta, snap.vocab, mesh)
+        snap.beta, snap.num_words_total, snap.meta, snap.vocab, mesh,
+        comm=comm)
 
 
 def write_sharded_snapshot(path: str, blocks, phi_sum, shard_of, local_id, *,
                            alpha: float, beta: float, num_words_total: int,
-                           meta: dict | None = None, vocab=None) -> str:
+                           meta: dict | None = None, vocab=None,
+                           comm: str = "psum") -> str:
     """Write the sharded layout from host-side blocks (the low-level writer;
     ``save_sharded_snapshot`` and ``DistributedLDA.publish_snapshot`` both
     land here).  Atomic at directory granularity: everything is staged into
@@ -327,6 +338,7 @@ def write_sharded_snapshot(path: str, blocks, phi_sum, shard_of, local_id, *,
             "num_words_total": int(num_words_total),
             "alpha": float(alpha),
             "beta": float(beta),
+            "comm": str(comm),
             "meta": dict(meta or {}),
         }
         _put(_MANIFEST, lambda f: f.write(json.dumps(manifest).encode()))
@@ -370,7 +382,7 @@ def save_sharded_snapshot(path: str, snap, num_shards: int | None = None) -> str
             np.asarray(jax.device_get(snap.word_local_id)),
             alpha=snap.alpha, beta=snap.beta,
             num_words_total=snap.num_words_total, meta=snap.meta,
-            vocab=snap.vocab)
+            vocab=snap.vocab, comm=snap.comm)
     if not num_shards:
         raise ValueError("num_shards required to shard a dense snapshot")
     blocks, shard_of, local_id = split_dense_phi(snap.phi_vk, num_shards)
@@ -398,14 +410,19 @@ def _read_sharded(path: str):
     return blocks, maps, manifest
 
 
-def load_sharded_snapshot(path: str, mesh=None) -> ShardedModelSnapshot:
-    """Load a sharded snapshot with each phi block on its own mesh device."""
+def load_sharded_snapshot(path: str, mesh=None,
+                          comm: str | None = None) -> ShardedModelSnapshot:
+    """Load a sharded snapshot with each phi block on its own mesh device.
+
+    ``comm`` overrides the snapshot's published gather strategy (else the
+    manifest's ``comm`` entry, else ``"psum"``)."""
     blocks, maps, manifest = _read_sharded(path)
     vocab = ([str(w) for w in maps["vocab"]] if "vocab" in maps else None)
     return _sharded_from_blocks(
         np.stack(blocks), maps["phi_sum"], maps["word_shard_of"],
         maps["word_local_id"], manifest["alpha"], manifest["beta"],
-        manifest["num_words_total"], manifest.get("meta", {}), vocab, mesh)
+        manifest["num_words_total"], manifest.get("meta", {}), vocab, mesh,
+        comm=comm or manifest.get("comm", "psum"))
 
 
 def assemble_sharded_snapshot(path: str) -> ModelSnapshot:
@@ -424,15 +441,17 @@ def assemble_sharded_snapshot(path: str) -> ModelSnapshot:
         meta=dict(manifest.get("meta", {})), vocab=vocab)
 
 
-def load_any_snapshot(path: str, mesh=None, shards: int | None = None):
+def load_any_snapshot(path: str, mesh=None, shards: int | None = None,
+                      comm: str | None = None):
     """Dispatch on layout: ``.sharded`` directories load mesh-sharded, dense
     ``.npz`` files load single-device; ``shards > 1`` re-shards a dense
-    snapshot at load time (serve_lda --shards)."""
+    snapshot at load time (serve_lda --shards).  ``comm`` tags the loaded
+    sharded snapshot's gather strategy (serve_lda --comm)."""
     if is_sharded_snapshot_path(path):
-        return load_sharded_snapshot(path, mesh)
+        return load_sharded_snapshot(path, mesh, comm=comm)
     snap = load_snapshot(path)
     if shards and shards > 1:
-        return shard_snapshot(snap, shards, mesh)
+        return shard_snapshot(snap, shards, mesh, comm=comm or "psum")
     return snap
 
 
