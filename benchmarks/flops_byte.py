@@ -37,6 +37,8 @@ def measured_ratio():
     lowered = jax.jit(functools.partial(trainer.lda_iteration, cfg, shard)
                       ).lower(state, key)
     ca = lowered.compile().cost_analysis()
+    if isinstance(ca, list):  # older jax: one entry per executable
+        ca = ca[0]
     f = float(ca.get("flops", 0) or 0)
     b = float(ca.get("bytes accessed", 1) or 1)
     return f, b, f / b

@@ -26,13 +26,21 @@ def run():
     cnts, tpcs, _ = updates.theta_to_ell(theta, ell_capacity(corpus, K))
     kw = dict(alpha=50.0 / K, beta=0.01, num_words_total=corpus.num_words)
 
+    # chunk plan is static per (tiling, width): built once, reused per call
+    plan = sample_ops.build_chunk_plan(shard.token_doc, 16)
+    z2 = jax.random.randint(jax.random.key(1), z.shape, 0, K,
+                            jnp.int32).astype(jnp.int16)
     for impl in ("ref", "pallas"):
         us = timeit(lambda: sample_ops.lda_sample(
             shard.tile_word, shard.token_doc, shard.token_mask, z, phi,
-            phi.sum(0), cnts, tpcs, key, impl=impl, **kw)[0])
+            phi.sum(0), cnts, tpcs, key, impl=impl, plan=plan, **kw)[0])
         emit(f"kernel_lda_sample_{impl}", us,
              f"tokens={corpus.num_tokens};interpret={impl == 'pallas'}")
         us = timeit(lambda: phi_ops.phi_update(
             shard.tile_word, shard.tile_first, z, shard.token_mask,
             num_words=corpus.num_words, num_topics=K, impl=impl))
         emit(f"kernel_phi_update_{impl}", us, f"K={K};V={corpus.num_words}")
+        us = timeit(lambda: phi_ops.phi_delta(
+            shard.tile_word, shard.tile_first, z, z2, shard.token_mask,
+            num_words=corpus.num_words, num_topics=K, impl=impl))
+        emit(f"kernel_phi_delta_{impl}", us, f"K={K};V={corpus.num_words}")

@@ -1,9 +1,18 @@
 """Paper Table 4 / Fig 7: sampling throughput (#Tokens/sec, Eq. 2).
 
-Measured on CPU for the dense O(K) baseline vs the sparsity-aware S/Q
-sampler (the paper's algorithmic win, platform-independent), plus the
-TPU-v5e projected tokens/sec from the roofline bytes (LDA is memory bound,
-so tokens/sec ~ HBM_BW / bytes-per-token).
+One row per training sampler backend — ``dense`` (the O(K) baseline the
+paper improves on), ``sq`` (the sparsity-aware S/Q sampler as an XLA scan)
+and ``pallas`` (the fused ``repro.kernels.lda_sample`` sweep; off-TPU it
+times the *interpreter*, validating the path end to end — the on-chip win
+is a hardware number).  Timings are of the AOT-compiled iteration only
+(compile time never pollutes a row; see ``trainer.train``), plus the
+TPU-v5e projected tokens/sec from the compiled HLO bytes (LDA is memory
+bound, so tokens/sec ~ HBM_BW / bytes-per-token).
+
+``--json PATH`` records every row as JSON — the CI bench-smoke job uploads
+it as ``BENCH_training.json``, the training-side twin of
+``BENCH_serving.json``; ``--tiny`` shrinks the corpus to a seconds-scale CI
+config.
 """
 import dataclasses
 import functools
@@ -11,8 +20,19 @@ import time
 
 from .common import emit, timeit
 
+SAMPLERS = ("dense", "sq", "pallas")
 
-def run():
+_ROWS: list | None = None   # row recorder for --json
+
+
+def _emit(name: str, us: float, derived: str, **extra):
+    emit(name, us, derived)
+    if _ROWS is not None:
+        _ROWS.append(dict(name=name, us_per_call=round(us, 1),
+                          derived=derived, **extra))
+
+
+def run(samplers=SAMPLERS, tiny=False):
     import jax
     from repro.core import trainer
     from repro.core.corpus import ell_capacity, tile_corpus
@@ -20,10 +40,16 @@ def run():
     from repro.launch.mesh import HBM_BW
 
     # paper regime: K >> avg doc length (sparsity pays), T/V >~ 100 so the
-    # per-word p*/tree work amortizes over that word's tokens
-    corpus = zipf_corpus(num_docs=512, num_words=500, avg_doc_len=100, seed=0)
-    K = 1024
-    for which in ("dense", "sq"):
+    # per-word p*/tree work amortizes over that word's tokens.  The pallas
+    # row always times the interpret-mode kernel off-TPU, so it gets the
+    # tiny corpus in every mode (same config => rows stay comparable to the
+    # BENCH_training.json trajectory).
+    big = zipf_corpus(num_docs=512, num_words=500, avg_doc_len=100, seed=0)
+    small = zipf_corpus(num_docs=96, num_words=160, avg_doc_len=40, seed=0)
+    on_tpu = jax.default_backend() == "tpu"
+    for which in samplers:
+        corpus = small if (tiny or (which == "pallas" and not on_tpu)) else big
+        K = 128 if corpus is small else 1024
         cfg = trainer.LDAConfig(num_topics=K, tile_tokens=64,
                                 tiles_per_step=8 if which == "dense" else 32,
                                 sampler=which,
@@ -32,14 +58,61 @@ def run():
         key = jax.random.key(0)
         state = trainer.init_state(cfg, shard, key)
         step = jax.jit(functools.partial(trainer.lda_iteration, cfg, shard))
-        us = timeit(lambda: step(state, key)[0].z, warmup=1, iters=3)
+        compiled = step.lower(state, key).compile()
+        iters = 1 if (which == "pallas" and not on_tpu) else 3
+        us = timeit(lambda: compiled(state, key)[0].z, warmup=1, iters=iters)
         tps = corpus.num_tokens / (us / 1e6)
-        emit(f"table4_cpu_{which}_K{K}", us,
-             f"tokens_per_sec={tps:.3g};T={corpus.num_tokens}")
+        _emit(f"train_{which}_K{K}", us,
+              f"tokens_per_sec={tps:.3g};T={corpus.num_tokens}",
+              sampler=which, tokens_per_sec=tps, num_tokens=corpus.num_tokens)
 
         # TPU projection: bytes/token from compiled HLO, memory-bound model
-        ca = step.lower(state, key).compile().cost_analysis()
-        bpt = float(ca.get("bytes accessed", 0) or 0) / corpus.num_tokens
-        proj = HBM_BW / max(bpt, 1e-9)
-        emit(f"table4_v5e_projected_{which}_K{K}", 0.0,
-             f"bytes_per_token={bpt:.0f};projected_tokens_per_sec={proj:.3g}")
+        # (interpret-mode pallas lowers through callbacks — no cost model)
+        try:
+            ca = compiled.cost_analysis()
+            if isinstance(ca, list):
+                ca = ca[0]
+            bpt = float(ca.get("bytes accessed", 0) or 0) / corpus.num_tokens
+        except Exception:
+            bpt = 0.0
+        if bpt > 0:
+            proj = HBM_BW / bpt
+            _emit(f"table4_v5e_projected_{which}_K{K}", 0.0,
+                  f"bytes_per_token={bpt:.0f};projected_tokens_per_sec={proj:.3g}",
+                  sampler=which, projected_tokens_per_sec=proj)
+
+
+def main(argv=None) -> int:
+    """Standalone entry: ``python -m benchmarks.throughput --tiny --json ...``."""
+    import argparse
+    import json
+
+    global _ROWS
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sampler", nargs="+", choices=SAMPLERS,
+                    default=list(SAMPLERS),
+                    help="training sampler backend(s) to time")
+    ap.add_argument("--tiny", action="store_true",
+                    help="seconds-scale sweep for the CI bench-smoke job")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write every row as JSON (CI artifact)")
+    args = ap.parse_args(argv)
+    if args.json:
+        _ROWS = []
+    print("name,us_per_call,derived")
+    run(samplers=tuple(args.sampler), tiny=args.tiny)
+    if args.json:
+        import jax
+
+        with open(args.json, "w") as f:
+            json.dump({"bench": "training_throughput", "tiny": args.tiny,
+                       "jax": jax.__version__,
+                       "backend": jax.default_backend(),
+                       "rows": _ROWS}, f, indent=1)
+        print(f"# wrote {len(_ROWS)} rows to {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

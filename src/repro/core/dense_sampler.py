@@ -59,17 +59,22 @@ def sample_sweep_dense(
     tiles_per_step: int = 8,
 ) -> Array:
     n, t = z.shape
+    # split-before-pad: draws depend on (key, corpus) only, never on the
+    # chunk width through n_pad (see sampler.sample_sweep)
+    keys = jax.random.split(key, n)
     n_pad = -n % tiles_per_step
     if n_pad:  # pad with masked-out tiles (static at trace time)
         tile_word = jnp.concatenate([tile_word, jnp.zeros(n_pad, tile_word.dtype)])
         token_doc = jnp.concatenate([token_doc, jnp.zeros((n_pad, t), token_doc.dtype)])
         token_mask = jnp.concatenate([token_mask, jnp.zeros((n_pad, t), bool)])
         z = jnp.concatenate([z, jnp.zeros((n_pad, t), z.dtype)])
+        keys = jnp.concatenate([keys, jnp.repeat(keys[:1], n_pad, axis=0)])
     steps = (n + n_pad) // tiles_per_step
 
     def chunk(carry, inp):
-        tw, td, tm, zc, keys = inp
-        unif = jax.vmap(lambda k: jax.random.uniform(k, (t,), jnp.float32))(keys)
+        tw, td, tm, zc, kc = inp
+        unif = jax.vmap(
+            lambda k: jax.random.uniform(k, (t,), jnp.float32))(kc)
         phi_cols = phi_vk[tw]
         z_new = jax.vmap(
             functools.partial(
@@ -80,13 +85,12 @@ def sample_sweep_dense(
         )(phi_cols, phi_sum, td, tm, zc, theta, unif)
         return carry, z_new
 
-    keys = jax.random.split(key, n + n_pad).reshape(steps, tiles_per_step)
     xs = (
         tile_word.reshape(steps, tiles_per_step),
         token_doc.reshape(steps, tiles_per_step, t),
         token_mask.reshape(steps, tiles_per_step, t),
         z.reshape(steps, tiles_per_step, t),
-        keys,
+        keys.reshape(steps, tiles_per_step),
     )
     _, z_chunks = jax.lax.scan(chunk, 0, xs)
     return z_chunks.reshape(n + n_pad, t)[:n]

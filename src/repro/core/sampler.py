@@ -100,6 +100,21 @@ _pstar = pstar
 _blocked_search = blocked_search
 
 
+def draw_sweep_uniforms(key: Array, n: int, t: int) -> Array:
+    """The sweep's (n, t, 2) uniforms: one key per *real* tile.
+
+    Defines the sweep's randomness contract.  ``sample_sweep`` draws the
+    same values chunk-by-chunk inside its scan (per-key PRNG, so batching
+    never changes them); the Pallas wrapper
+    (``repro.kernels.lda_sample.ops``) materializes this tensor as the
+    kernel operand — either way the draws are bit-identical and
+    deliberately independent of any padding (split before pad).
+    """
+    keys = jax.random.split(key, n)
+    return jax.vmap(
+        lambda k: jax.random.uniform(k, (t, 2), jnp.float32))(keys)
+
+
 def sample_one_tile(
     phi_col: Array,          # (K,) int — this word's phi row
     phi_sum: Array,          # (K,) int — global per-topic totals
@@ -172,19 +187,28 @@ def sample_sweep(
     chunk (the paper's "thousands of concurrent samplers").
     """
     n, t = z.shape
+    # Per-tile keys split over the *unpadded* tile count so the draws are a
+    # function of (key, corpus) only: jax.random.split is not prefix-stable,
+    # so splitting after padding would make every draw depend on
+    # tiles_per_step through n_pad.  Padding tiles reuse key 0 (fully
+    # masked).  Uniforms are drawn per chunk inside the scan — only keys
+    # cross the scan boundary, keeping the working set chunk-sized; the
+    # Pallas sweep derives the bit-identical (n, t, 2) tensor via
+    # ``draw_sweep_uniforms``.
+    keys = jax.random.split(key, n)
     n_pad = -n % tiles_per_step
     if n_pad:  # pad with masked-out tiles of word 0 (static at trace time)
         tile_word = jnp.concatenate([tile_word, jnp.zeros(n_pad, tile_word.dtype)])
         token_doc = jnp.concatenate([token_doc, jnp.zeros((n_pad, t), token_doc.dtype)])
         token_mask = jnp.concatenate([token_mask, jnp.zeros((n_pad, t), bool)])
         z = jnp.concatenate([z, jnp.zeros((n_pad, t), z.dtype)])
+        keys = jnp.concatenate([keys, jnp.repeat(keys[:1], n_pad, axis=0)])
     steps = (n + n_pad) // tiles_per_step
 
     def chunk(carry, inp):
-        tw, td, tm, zc, keys = inp
+        tw, td, tm, zc, kc = inp
         unif = jax.vmap(
-            lambda k: jax.random.uniform(k, (t, 2), jnp.float32)
-        )(keys)
+            lambda k: jax.random.uniform(k, (t, 2), jnp.float32))(kc)
         phi_cols = phi_vk[tw]                                   # (c, K) gather
         z_new, sp, ssq = jax.vmap(
             functools.partial(
@@ -195,13 +219,12 @@ def sample_sweep(
         )(phi_cols, phi_sum, td, tm, zc, ell_counts, ell_topics, unif)
         return carry, (z_new, sp.sum(), ssq.sum(), (tm.sum()))
 
-    keys = jax.random.split(key, n + n_pad).reshape(steps, tiles_per_step)
     xs = (
         tile_word.reshape(steps, tiles_per_step),
         token_doc.reshape(steps, tiles_per_step, t),
         token_mask.reshape(steps, tiles_per_step, t),
         z.reshape(steps, tiles_per_step, t),
-        keys,
+        keys.reshape(steps, tiles_per_step),
     )
     _, (z_chunks, sp_counts, ssq_sums, tok_counts) = jax.lax.scan(chunk, 0, xs)
     z_new = z_chunks.reshape(n + n_pad, t)[:n]

@@ -14,7 +14,21 @@ Per iteration (delayed-count semantics, exactly the paper's):
      (WorkSchedule1: one sweep; WorkSchedule2: M micro-chunks scanned with
      theta refreshed in between — fresher counts, the streaming analogue of
      the paper's chunk pipeline);
-  3. phi rebuilt from the new z; replicas reduced+broadcast (psum, C3).
+  3. phi advanced **incrementally**: one ``updates.phi_delta`` scatter pass
+     over the sweep's moves, added to the iteration-start phi (exact in int
+     arithmetic — ``phi_old + delta == rebuild(z_new)``), then replicas
+     reduced+broadcast (psum, C3).  ``compressed_sync`` all-reduces the same
+     delta in int16.
+
+Sampler backends (``LDAConfig.sampler``):
+  * ``"sq"``     — the paper's sparsity-aware S/Q sampler as an XLA scan
+                   (repro.core.sampler);
+  * ``"pallas"`` — the fused ``repro.kernels.lda_sample`` sweep: phi rows
+                   and the chunk's ELL rows streamed on-chip by scalar-
+                   prefetch index maps, draws bit-identical to ``"sq"``
+                   under the same key; count updates go through the
+                   ``repro.kernels.phi_update`` MXU kernel;
+  * ``"dense"``  — the O(K) baseline.
 """
 from __future__ import annotations
 
@@ -42,13 +56,22 @@ class LDAConfig:
     tiles_per_step: int = 64         # vmap width inside the sweep scan
     ell_capacity: int | None = None  # P; None = exact bound from corpus
     micro_chunks: int = 1            # M: 1 = WorkSchedule1, >1 = WorkSchedule2
-    sampler: str = "sq"              # "sq" (paper) | "dense" (O(K) baseline)
+    sampler: str = "sq"              # "sq" (paper) | "pallas" (fused kernel)
+    #                                  | "dense" (O(K) baseline)
     topic_dtype: Any = jnp.int16     # C7
     compressed_sync: bool = False    # int16 delta all-reduce (see sync.py)
     seed: int = 0
 
+    def __post_init__(self):
+        if self.sampler not in ("sq", "pallas", "dense"):
+            raise ValueError(f"unknown sampler {self.sampler!r}")
+
     def resolved_alpha(self) -> float:
         return 50.0 / self.num_topics if self.alpha is None else self.alpha
+
+    def kernel_interpret(self) -> bool:
+        """Pallas kernels run compiled on TPU, interpreted elsewhere."""
+        return jax.default_backend() != "tpu"
 
 
 class LDAState(NamedTuple):
@@ -134,6 +157,15 @@ def lda_iteration(
                 tiles_per_step=min(cfg.tiles_per_step, n), **sweep_kwargs)
             sparse_frac = stats.sparse_frac
             mean_ssq = stats.mean_s_over_sq
+        elif cfg.sampler == "pallas":
+            from ..kernels.lda_sample import ops as lda_kernel
+            z_new, stats = lda_kernel.lda_sample(
+                shard.tile_word, shard.token_doc, shard.token_mask, state.z,
+                state.phi_vk, state.phi_sum, ell_c, ell_t, key,
+                tiles_per_step=min(cfg.tiles_per_step, n),
+                interpret=cfg.kernel_interpret(), **sweep_kwargs)
+            sparse_frac = stats.sparse_frac
+            mean_ssq = stats.mean_s_over_sq
         else:
             z_new = dense_sampler.sample_sweep_dense(
                 state.phi_vk, state.phi_sum, shard.tile_word, shard.token_doc,
@@ -152,50 +184,92 @@ def lda_iteration(
         nc = (n + n_pad) // M
         P = ell_c.shape[1]
 
-        def chunk_step(theta_c, inp):
-            tw, td, tm, zc, kc = inp
-            cnts, tpcs = jax.lax.top_k(theta_c, P)
-            if cfg.sampler == "sq":
-                z_c, st = sampler.sample_sweep(
-                    state.phi_vk, state.phi_sum, tw, td, tm, zc, cnts, tpcs,
-                    kc, tiles_per_step=min(cfg.tiles_per_step, nc), **sweep_kwargs)
-                sf, ssq = st.sparse_frac, st.mean_s_over_sq
-            else:
-                z_c = dense_sampler.sample_sweep_dense(
-                    state.phi_vk, state.phi_sum, tw, td, tm, zc, theta_c, kc,
-                    tiles_per_step=min(cfg.tiles_per_step, nc), **sweep_kwargs)
-                sf, ssq = jnp.float32(0), jnp.float32(0)
-            delta = updates.theta_delta(zc, z_c, td, tm,
-                                        theta_c.shape[0], K)
-            theta_n = theta_c + sync.sync_theta(delta, model_axes)
-            return theta_n, (z_c, sf, ssq)
+        if cfg.sampler == "pallas":
+            # unrolled over the M micro-chunks (M is small and static): each
+            # chunk needs its host-built plan, and unrolling produces the
+            # exact op sequence of the "sq" scan below, so draws stay
+            # bit-identical.  theta (and the ELL re-slice from it) is carried
+            # incrementally — theta_delta, never a rebuild.
+            from ..kernels.lda_sample import ops as lda_kernel
+            C = min(cfg.tiles_per_step, nc)
+            # plans come from the *host-side* tiling (shard.token_doc is a
+            # trace-time constant; the jnp-padded td_a is already a tracer)
+            td_np = np.asarray(shard.token_doc)
+            if n_pad:
+                td_np = np.concatenate(
+                    [td_np, np.zeros((n_pad, t), td_np.dtype)])
+            keys_m = jax.random.split(key, M)
+            theta_c = theta
+            z_parts, sfs_l, ssqs_l = [], [], []
+            for m in range(M):
+                sl = slice(m * nc, (m + 1) * nc)
+                cnts, tpcs = jax.lax.top_k(theta_c, P)
+                plan = lda_kernel.build_chunk_plan(td_np[sl], C)
+                z_c, st = lda_kernel.lda_sample(
+                    tw_a[sl], td_a[sl], tm_a[sl], z_a[sl],
+                    state.phi_vk, state.phi_sum, cnts, tpcs, keys_m[m],
+                    plan=plan, interpret=cfg.kernel_interpret(),
+                    **sweep_kwargs)
+                delta = updates.theta_delta(z_a[sl], z_c, td_a[sl], tm_a[sl],
+                                            theta_c.shape[0], K)
+                theta_c = theta_c + sync.sync_theta(delta, model_axes)
+                z_parts.append(z_c)
+                sfs_l.append(st.sparse_frac)
+                ssqs_l.append(st.mean_s_over_sq)
+            z_new = jnp.concatenate(z_parts)[:n]
+            sparse_frac = jnp.stack(sfs_l).mean()
+            mean_ssq = jnp.stack(ssqs_l).mean()
+        else:
+            def chunk_step(theta_c, inp):
+                tw, td, tm, zc, kc = inp
+                cnts, tpcs = jax.lax.top_k(theta_c, P)
+                if cfg.sampler == "sq":
+                    z_c, st = sampler.sample_sweep(
+                        state.phi_vk, state.phi_sum, tw, td, tm, zc, cnts, tpcs,
+                        kc, tiles_per_step=min(cfg.tiles_per_step, nc), **sweep_kwargs)
+                    sf, ssq = st.sparse_frac, st.mean_s_over_sq
+                else:
+                    z_c = dense_sampler.sample_sweep_dense(
+                        state.phi_vk, state.phi_sum, tw, td, tm, zc, theta_c, kc,
+                        tiles_per_step=min(cfg.tiles_per_step, nc), **sweep_kwargs)
+                    sf, ssq = jnp.float32(0), jnp.float32(0)
+                delta = updates.theta_delta(zc, z_c, td, tm,
+                                            theta_c.shape[0], K)
+                theta_n = theta_c + sync.sync_theta(delta, model_axes)
+                return theta_n, (z_c, sf, ssq)
 
-        xs = (
-            tw_a.reshape(M, nc),
-            td_a.reshape(M, nc, t),
-            tm_a.reshape(M, nc, t),
-            z_a.reshape(M, nc, t),
-            jax.random.split(key, M),
-        )
-        _, (z_chunks, sfs, ssqs) = jax.lax.scan(chunk_step, theta, xs)
-        z_new = z_chunks.reshape(n + n_pad, t)[:n]
-        sparse_frac = sfs.mean()
-        mean_ssq = ssqs.mean()
+            xs = (
+                tw_a.reshape(M, nc),
+                td_a.reshape(M, nc, t),
+                tm_a.reshape(M, nc, t),
+                z_a.reshape(M, nc, t),
+                jax.random.split(key, M),
+            )
+            _, (z_chunks, sfs, ssqs) = jax.lax.scan(chunk_step, theta, xs)
+            z_new = z_chunks.reshape(n + n_pad, t)[:n]
+            sparse_frac = sfs.mean()
+            mean_ssq = ssqs.mean()
 
-    # phi rebuild + reduce/broadcast (C3)
+    # incremental phi advance + reduce/broadcast (C3): one scatter/MXU pass
+    # over the sweep's moves instead of a full count rebuild (and instead of
+    # the TWO rebuilds the compressed_sync branch used to pay); exact in int
+    # arithmetic, phi_old + delta == rebuild(z_new).
+    if cfg.sampler == "pallas":
+        from ..kernels.phi_update import ops as phi_kernel
+        delta = phi_kernel.phi_delta(
+            shard.tile_word, shard.tile_first, state.z, z_new,
+            shard.token_mask, num_words=shard.num_words, num_topics=K,
+            interpret=cfg.kernel_interpret())
+    else:
+        delta = updates.phi_delta(state.z, z_new, shard.tile_word,
+                                  shard.token_mask, shard.num_words, K)
     if cfg.compressed_sync and data_axes:
         # beyond-paper: all-reduce the int16 per-iteration DELTA instead of
         # rebuilt int32 counts — half the bytes (C7 applied to the wire).
         # Exact while the global per-entry flux fits int16 (see sync.py).
-        d_new = updates.phi_from_z(z_new, shard.tile_word, shard.token_mask,
-                                   shard.num_words, K)
-        d_old = updates.phi_from_z(state.z, shard.tile_word, shard.token_mask,
-                                   shard.num_words, K)
-        phi = state.phi_vk + sync.compressed_sync_phi(d_new - d_old, data_axes)
+        phi = state.phi_vk + sync.compressed_sync_phi(delta, data_axes)
     else:
-        phi_local = updates.phi_from_z(z_new, shard.tile_word,
-                                       shard.token_mask, shard.num_words, K)
-        phi = sync.sync_phi(phi_local, data_axes)
+        phi = state.phi_vk + sync.sync_phi(delta, data_axes)
     phi_sum = sync.global_phi_sum(phi, model_axes)
     new_state = LDAState(z=z_new, phi_vk=phi, phi_sum=phi_sum,
                          iteration=state.iteration + 1)
@@ -235,6 +309,7 @@ class TrainResult:
     ll_per_token: list[float]
     tokens_per_sec: list[float]
     stats: list[tuple[float, float, float]]  # (sparse_frac, ell_overflow, S/(S+Q))
+    compile_sec: float = 0.0  # jit compile time, excluded from tokens_per_sec
 
 
 def train(
@@ -253,7 +328,13 @@ def train(
     key = jax.random.key(cfg.seed)
     state = init_state(cfg, shard, key)
 
-    step = jax.jit(functools.partial(lda_iteration, cfg, shard))
+    # AOT-compile before the loop: iteration 0 used to include jit compile
+    # time, polluting the first row of every throughput trajectory.  Compile
+    # is reported separately instead.
+    t0 = time.perf_counter()
+    step = jax.jit(functools.partial(lda_iteration, cfg, shard)
+                   ).lower(state, key).compile()
+    compile_sec = time.perf_counter() - t0
     ll_fn = jax.jit(functools.partial(log_likelihood, cfg, shard))
 
     lls: list[float] = []
@@ -272,4 +353,5 @@ def train(
             lls.append(ll)
             if callback:
                 callback(it, state, ll)
-    return TrainResult(state=state, ll_per_token=lls, tokens_per_sec=tps, stats=st)
+    return TrainResult(state=state, ll_per_token=lls, tokens_per_sec=tps,
+                       stats=st, compile_sec=compile_sec)

@@ -50,6 +50,27 @@ def theta_from_z(
     return theta.at[docs, topics].add(inc)
 
 
+def phi_delta(
+    z_old: Array, z_new: Array, tile_word: Array, token_mask: Array,
+    num_words: int, num_topics: int,
+) -> Array:
+    """Incremental phi update: one scatter pass over the sweep's moves.
+
+    Replaces the per-iteration full ``phi_from_z`` rebuild (and the *two*
+    rebuilds of the ``compressed_sync`` branch): only the tokens that moved
+    contribute, ``phi_new == phi_old + phi_delta`` exactly (int arithmetic,
+    same invariant the trainer's count tests pin).  The MXU variant lives in
+    ``repro.kernels.phi_update``.
+    """
+    n, t = z_new.shape
+    words = jnp.broadcast_to(tile_word[:, None], (n, t)).reshape(-1)
+    inc = token_mask.reshape(-1).astype(jnp.int32)
+    d = jnp.zeros((num_words, num_topics), jnp.int32)
+    d = d.at[words, z_new.reshape(-1).astype(jnp.int32)].add(inc)
+    d = d.at[words, z_old.reshape(-1).astype(jnp.int32)].add(-inc)
+    return d
+
+
 def theta_delta(
     z_old: Array, z_new: Array, token_doc: Array, token_mask: Array,
     num_docs: int, num_topics: int,

@@ -1,20 +1,41 @@
-"""Pallas TPU kernel: the CuLDA_CGS sampler (paper §6.1), one word tile per
-grid step.
+"""Pallas TPU kernel: the CuLDA_CGS sampler (paper §6.1), fused training
+sweep — one grid step per *chunk* of word tiles, ELL rows streamed on-chip.
 
 GPU -> TPU mapping (DESIGN.md §2):
   * thread block sharing one word's p* in shared memory
-        -> one grid step whose phi column block is DMA'd into VMEM via a
-           **scalar-prefetch index map** (the word id picks the block);
+        -> phi rows DMA'd into a VMEM scratch table via a **scalar-prefetch
+           index map** (the word id picks the block), one row per inner grid
+           step, then shared by every token of the chunk;
+  * per-token theta/ELL reads from global memory (SaberLDA's sparsity-aware
+    layout / WarpLDA's cache-local accesses)
+        -> a **second scalar-prefetch index map** over the chunk's distinct
+           doc ids streams exactly the ELL rows this chunk touches into a
+           VMEM table; tokens then gather *on-chip* through a static
+           token->slot map.  The HBM-materialized ``ell_counts[token_doc]``
+           ``(n, t, P)`` tensor of the pre-fusion wrapper is gone — HBM
+           traffic is one (1, P) row per distinct (chunk, doc) pair instead
+           of one per token;
   * 32 warp-samplers per block
-        -> the whole (tile_tokens,) vector sampled in lock-step on the VPU;
+        -> the whole (tiles_per_step, tile_tokens) token block sampled in
+           lock-step on the VPU;
   * 32-ary shared-memory index tree (C5)
-        -> 128-wide two-level blocked search in VMEM registers;
+        -> 128-wide two-level blocked search in VMEM registers, with the
+           block sums for all tiles of the chunk computed once per chunk
+           (multi-tile grid steps keep phi rows, phi_sum and the search
+           state VMEM-resident across the chunk — the fusion discipline the
+           fold_in serving kernel proved out);
   * short-int compression (C7)
-        -> int16 ELL topic ids / counts, widened in-register.
+        -> int16 z widened in-register by the wrapper.
+
+Grid layout: ``(n_chunks, S)`` with ``S = max(tiles_per_step, docs_per_
+chunk)``.  Inner steps assemble the chunk's phi and ELL tables in VMEM
+scratch; the last inner step samples every token of the chunk.  Scratch
+persists across the inner dimension ("arbitrary" semantics), the sampling
+math is bit-identical to ``repro.core.sampler.sample_one_tile``.
 
 The kernel is validated in interpret mode on CPU (bit-identical draws vs the
-pure-jnp oracle in ``ref.py``) and written against the TPU BlockSpec/VMEM
-model for real hardware.
+pure-jnp oracle in ``ref.py`` and vs the XLA sweep) and written against the
+TPU BlockSpec/VMEM model for real hardware.
 """
 from __future__ import annotations
 
@@ -25,88 +46,118 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-SEARCH_BLOCK = 128
+from repro.core.sampler import SEARCH_BLOCK, _pick_block, pick_search_block
 
 
 def _kernel(
-    tile_word_ref,      # scalar prefetch: (n,) int32
-    phi_ref,            # (1, K) int32 — this tile's word row (VMEM)
+    tile_word_ref,      # scalar prefetch 1: (n,) int32 word id per tile
+    chunk_docs_ref,     # scalar prefetch 2: (n_chunks, dpc) int32 doc ids
+    phi_row_ref,        # (1, K) int32 — tile min(s, C-1)'s word row (VMEM)
     phi_sum_ref,        # (1, K) int32
-    ell_counts_ref,     # (1, t, P) int32 (pre-gathered per token)
-    ell_topics_ref,     # (1, t, P) int32
-    uniforms_ref,       # (1, t, 2) float32
-    mask_ref,           # (1, t) int32
-    z_old_ref,          # (1, t) int32
-    z_new_ref,          # out (1, t) int32
-    sparse_ref,         # out (1, t) int32 — drew from p1? (diagnostics/tests)
+    ell_cnt_row_ref,    # (1, P) int32 — doc-slot min(s, dpc-1)'s ELL counts
+    ell_tpc_row_ref,    # (1, P) int32 — ... and topics
+    token_slot_ref,     # (C, t) int32 — token -> chunk doc-slot (static map)
+    uniforms_ref,       # (C, t, 2) float32
+    mask_ref,           # (C, t) int32
+    z_old_ref,          # (C, t) int32
+    z_new_ref,          # out (C, t) int32
+    sparse_ref,         # out (C, t) int32 — drew from p1?
+    ssq_ref,            # out (C, t) float32 — per-token S/(S+Q), 0 on pads
+    phi_scr,            # VMEM (C, K) int32 — chunk's phi rows
+    ell_cnt_scr,        # VMEM (dpc, P) int32 — chunk's ELL counts
+    ell_tpc_scr,        # VMEM (dpc, P) int32 — chunk's ELL topics
     *,
+    tiles_per_step: int,
+    docs_per_chunk: int,
     alpha: float,
     beta: float,
     num_words_total: int,
 ):
-    K = phi_ref.shape[1]
-    B = SEARCH_BLOCK if K % SEARCH_BLOCK == 0 else _pick_block(K)
-    nb = K // B
+    C, dpc = tiles_per_step, docs_per_chunk
+    s = pl.program_id(1)
+    S = pl.num_programs(1)
 
-    # C7: p*(k) once per tile, VMEM-resident
-    pstar = (phi_ref[0, :].astype(jnp.float32) + beta) / (
-        phi_sum_ref[0, :].astype(jnp.float32) + beta * num_words_total)
-    Q = alpha * jnp.sum(pstar)
+    # ---- assembly steps: stage the fetched rows into the chunk tables ----
+    # (indices clamp once the respective table is full; the re-fetched row is
+    # identical, so the overwrite is a no-op)
+    phi_scr[pl.ds(jnp.minimum(s, C - 1), 1), :] = phi_row_ref[...]
+    j = jnp.minimum(s, dpc - 1)
+    ell_cnt_scr[pl.ds(j, 1), :] = ell_cnt_row_ref[...]
+    ell_tpc_scr[pl.ds(j, 1), :] = ell_tpc_row_ref[...]
 
-    # C5 level-1 "index tree": per-block sums + cumulative
-    blocks = pstar.reshape(nb, B)
-    bsum = jnp.sum(blocks, axis=1)
-    bcum = jnp.cumsum(bsum)
-    total = bcum[-1]
+    @pl.when(s == S - 1)
+    def _sample():  # ---- last inner step: the whole chunk, tables resident
+        K = phi_row_ref.shape[1]
+        P = ell_cnt_row_ref.shape[1]
+        t = z_old_ref.shape[1]
+        B = pick_search_block(K)
+        nb = K // B
 
-    # C4 sparse side: p1 over the ELL rows
-    tpc = ell_topics_ref[0]                                   # (t, P)
-    cnt = ell_counts_ref[0].astype(jnp.float32)               # (t, P)
-    p1 = cnt * jnp.take(pstar, tpc, axis=0)                   # (t, P) gather
-    p1_cum = jnp.cumsum(p1, axis=1)
-    S = p1_cum[:, -1]
+        # C7: p*(k) once per tile, VMEM-resident for all the chunk's tokens
+        pstar = (phi_scr[...].astype(jnp.float32) + beta) / (
+            phi_sum_ref[0, :].astype(jnp.float32)[None, :]
+            + beta * num_words_total)                         # (C, K)
+        Q = alpha * pstar.sum(-1)                             # (C,)
 
-    u1 = uniforms_ref[0, :, 0]
-    u2 = uniforms_ref[0, :, 1]
-    use_sparse = u1 * (S + Q) < S
+        # C5 level-1 "index tree": block sums for the whole chunk at once
+        blocks = pstar.reshape(C, nb, B)
+        bsum = blocks.sum(-1)                                 # (C, nb)
+        bcum = jnp.cumsum(bsum, axis=-1)
+        total = bcum[:, -1]
 
-    # sparse draw: search the P-entry prefix sums
-    t_sp = (u2 * S)[:, None]
-    j = jnp.minimum(jnp.sum((p1_cum <= t_sp).astype(jnp.int32), axis=1),
-                    tpc.shape[1] - 1)
-    k_sparse = jnp.take_along_axis(tpc, j[:, None], axis=1)[:, 0]
+        # C4 sparse side: ELL rows gathered from the on-chip table
+        slot = token_slot_ref[...]                            # (C, t)
+        flat = slot.reshape(-1)
+        cnt = jnp.take(ell_cnt_scr[...], flat, axis=0).reshape(C, t, P)
+        tpc = jnp.take(ell_tpc_scr[...], flat, axis=0).reshape(C, t, P)
+        p1 = cnt.astype(jnp.float32) * jnp.take_along_axis(
+            pstar[:, None, :], tpc, axis=2)                   # (C, t, P)
+        p1_cum = jnp.cumsum(p1, axis=-1)
+        Sm = p1_cum[..., -1]                                  # (C, t)
 
-    # dense draw: two-level blocked search (C5)
-    target = u2 * total
-    b_idx = jnp.minimum(
-        jnp.sum((bcum[None, :] <= target[:, None]).astype(jnp.int32), axis=1),
-        nb - 1)
-    prev = jnp.where(b_idx > 0, jnp.take(bcum, jnp.maximum(b_idx - 1, 0)), 0.0)
-    seg = jnp.take(blocks, b_idx, axis=0)                     # (t, B)
-    seg_cum = jnp.cumsum(seg, axis=1) + prev[:, None]
-    in_b = jnp.minimum(
-        jnp.sum((seg_cum <= target[:, None]).astype(jnp.int32), axis=1), B - 1)
-    k_dense = b_idx * B + in_b
+        u1 = uniforms_ref[..., 0]
+        u2 = uniforms_ref[..., 1]
+        use_sparse = u1 * (Sm + Q[:, None]) < Sm
 
-    mask = mask_ref[0] != 0
-    z = jnp.where(use_sparse, k_sparse.astype(jnp.int32), k_dense.astype(jnp.int32))
-    z_new_ref[0, :] = jnp.where(mask, z, z_old_ref[0, :])
-    sparse_ref[0, :] = (use_sparse & mask).astype(jnp.int32)
+        # sparse draw: search the P-entry prefix sums
+        t_sp = (u2 * Sm)[..., None]
+        jj = jnp.minimum(
+            jnp.sum((p1_cum <= t_sp).astype(jnp.int32), axis=-1), P - 1)
+        k_sparse = jnp.take_along_axis(tpc, jj[..., None], axis=-1)[..., 0]
 
+        # dense draw: two-level blocked search (C5)
+        target = u2 * total[:, None]
+        b_idx = jnp.minimum(
+            jnp.sum((bcum[:, None, :] <= target[..., None]).astype(jnp.int32),
+                    axis=-1), nb - 1)
+        prev = jnp.where(
+            b_idx > 0,
+            jnp.take_along_axis(bcum, jnp.maximum(b_idx - 1, 0), axis=-1),
+            0.0)
+        seg = jnp.take_along_axis(blocks, b_idx[..., None], axis=1)  # (C,t,B)
+        seg_cum = jnp.cumsum(seg, axis=-1) + prev[..., None]
+        in_b = jnp.minimum(
+            jnp.sum((seg_cum <= target[..., None]).astype(jnp.int32),
+                    axis=-1), B - 1)
+        k_dense = b_idx * B + in_b
 
-def _pick_block(K: int) -> int:
-    for b in (128, 64, 32, 16, 8, 4, 2, 1):
-        if K % b == 0:
-            return b
-    return 1
+        mask = mask_ref[...] != 0
+        z = jnp.where(use_sparse, k_sparse.astype(jnp.int32),
+                      k_dense.astype(jnp.int32))
+        z_new_ref[...] = jnp.where(mask, z, z_old_ref[...])
+        sparse_ref[...] = (use_sparse & mask).astype(jnp.int32)
+        ssq_ref[...] = jnp.where(
+            mask, Sm / jnp.maximum(Sm + Q[:, None], 1e-30), 0.0)
 
 
 def lda_sample_tiles(
-    tile_word,     # (n,)   int32
+    tile_word,     # (n,) int32 — n a multiple of tiles_per_step
+    chunk_docs,    # (n_chunks, dpc) int32 — distinct doc ids per chunk
+    token_slot,    # (n, t) int32 — token -> chunk doc-slot
     phi_vk,        # (V, K) int32
-    phi_sum,       # (K,)   int32
-    ell_counts_t,  # (n, t, P) int32 — per-token gathered ELL
-    ell_topics_t,  # (n, t, P) int32
+    phi_sum,       # (K,) int32
+    ell_counts,    # (D, P) int32 — per-DOC ELL, *never* per-token gathered
+    ell_topics,    # (D, P) int32
     uniforms,      # (n, t, 2) float32
     token_mask,    # (n, t) int32
     z_old,         # (n, t) int32
@@ -114,41 +165,67 @@ def lda_sample_tiles(
     alpha: float,
     beta: float,
     num_words_total: int,
+    tiles_per_step: int,
     interpret: bool = True,
 ):
-    """pallas_call wrapper: grid over tiles, phi row selected by scalar
-    prefetch (the word id indexes the block — zero host gathers)."""
+    """pallas_call wrapper: grid (chunks, assembly-steps); phi rows *and* ELL
+    rows selected by scalar-prefetch index maps — zero host/HBM gathers.
+
+    Returns (z_new, sparse, ssq), all (n, t).
+    """
     n, t = z_old.shape
     V, K = phi_vk.shape
-    P = ell_counts_t.shape[-1]
+    D, P = ell_counts.shape
+    C = tiles_per_step
+    assert n % C == 0, (n, C)
+    n_chunks, dpc = chunk_docs.shape
+    assert n_chunks * C == n, (n_chunks, C, n)
+    S = max(C, dpc)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(n,),
+        num_scalar_prefetch=2,
+        grid=(n_chunks, S),
         in_specs=[
-            pl.BlockSpec((1, K), lambda i, tw: (tw[i], 0)),       # phi row
-            pl.BlockSpec((1, K), lambda i, tw: (0, 0)),           # phi_sum
-            pl.BlockSpec((1, t, P), lambda i, tw: (i, 0, 0)),
-            pl.BlockSpec((1, t, P), lambda i, tw: (i, 0, 0)),
-            pl.BlockSpec((1, t, 2), lambda i, tw: (i, 0, 0)),
-            pl.BlockSpec((1, t), lambda i, tw: (i, 0)),
-            pl.BlockSpec((1, t), lambda i, tw: (i, 0)),
+            # one phi row per assembly step, picked by the tile's word id
+            pl.BlockSpec(
+                (1, K),
+                lambda c, s, tw, cd: (tw[c * C + jnp.minimum(s, C - 1)], 0)),
+            pl.BlockSpec((1, K), lambda c, s, tw, cd: (0, 0)),   # phi_sum
+            # one ELL row per assembly step, picked by the chunk's doc list
+            pl.BlockSpec(
+                (1, P),
+                lambda c, s, tw, cd: (cd[c, jnp.minimum(s, dpc - 1)], 0)),
+            pl.BlockSpec(
+                (1, P),
+                lambda c, s, tw, cd: (cd[c, jnp.minimum(s, dpc - 1)], 0)),
+            pl.BlockSpec((C, t), lambda c, s, tw, cd: (c, 0)),
+            pl.BlockSpec((C, t, 2), lambda c, s, tw, cd: (c, 0, 0)),
+            pl.BlockSpec((C, t), lambda c, s, tw, cd: (c, 0)),
+            pl.BlockSpec((C, t), lambda c, s, tw, cd: (c, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((1, t), lambda i, tw: (i, 0)),
-            pl.BlockSpec((1, t), lambda i, tw: (i, 0)),
+            pl.BlockSpec((C, t), lambda c, s, tw, cd: (c, 0)),
+            pl.BlockSpec((C, t), lambda c, s, tw, cd: (c, 0)),
+            pl.BlockSpec((C, t), lambda c, s, tw, cd: (c, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((C, K), jnp.int32),
+            pltpu.VMEM((dpc, P), jnp.int32),
+            pltpu.VMEM((dpc, P), jnp.int32),
         ],
     )
-    kern = functools.partial(_kernel, alpha=alpha, beta=beta,
-                             num_words_total=num_words_total)
-    z_new, sparse = pl.pallas_call(
+    kern = functools.partial(
+        _kernel, tiles_per_step=C, docs_per_chunk=dpc,
+        alpha=alpha, beta=beta, num_words_total=num_words_total)
+    z_new, sparse, ssq = pl.pallas_call(
         kern,
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((n, t), jnp.int32),
             jax.ShapeDtypeStruct((n, t), jnp.int32),
+            jax.ShapeDtypeStruct((n, t), jnp.float32),
         ],
         interpret=interpret,
-    )(tile_word, phi_vk, phi_sum.reshape(1, K), ell_counts_t, ell_topics_t,
-      uniforms, token_mask, z_old)
-    return z_new, sparse
+    )(tile_word, chunk_docs, phi_vk, phi_sum.reshape(1, K),
+      ell_counts, ell_topics, token_slot, uniforms, token_mask, z_old)
+    return z_new, sparse, ssq

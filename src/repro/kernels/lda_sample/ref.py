@@ -3,6 +3,11 @@
 Mirrors the kernel's math exactly (same blocked search, same branch rule)
 using only jnp ops; kernel draws must match bit-for-bit given the same
 uniforms.  Also cross-checked against ``repro.core.sampler`` in tests.
+
+The oracle deliberately keeps the *naive* data movement the kernel
+eliminates: it gathers the per-token ELL rows ``ell_*[token_doc]`` in HBM —
+that is the baseline the on-chip doc-slot streaming is measured against,
+and it makes the oracle independent of the kernel's chunk plan.
 """
 from __future__ import annotations
 
@@ -12,9 +17,19 @@ from .kernel import SEARCH_BLOCK, _pick_block
 
 
 def lda_sample_tiles_ref(
-    tile_word, phi_vk, phi_sum, ell_counts_t, ell_topics_t, uniforms,
-    token_mask, z_old, *, alpha, beta, num_words_total,
+    tile_word,     # (n,) int32
+    token_doc,     # (n, t) int32
+    phi_vk,        # (V, K) int32
+    phi_sum,       # (K,) int32
+    ell_counts,    # (D, P) int32
+    ell_topics,    # (D, P) int32
+    uniforms,      # (n, t, 2) float32
+    token_mask,    # (n, t) int32
+    z_old,         # (n, t) int32
+    *,
+    alpha, beta, num_words_total,
 ):
+    """Returns (z_new, sparse, ssq), all (n, t) — the kernel's contract."""
     n, t = z_old.shape
     V, K = phi_vk.shape
     B = SEARCH_BLOCK if K % SEARCH_BLOCK == 0 else _pick_block(K)
@@ -30,10 +45,9 @@ def lda_sample_tiles_ref(
     bcum = jnp.cumsum(bsum, axis=-1)
     total = bcum[:, -1]
 
-    tpc = ell_topics_t                                        # (n, t, P)
-    cnt = ell_counts_t.astype(jnp.float32)
-    p1 = cnt * jnp.take_along_axis(
-        pstar[:, None, :], tpc.astype(jnp.int32), axis=2)
+    tpc = ell_topics[token_doc].astype(jnp.int32)             # (n, t, P)
+    cnt = ell_counts[token_doc].astype(jnp.float32)
+    p1 = cnt * jnp.take_along_axis(pstar[:, None, :], tpc, axis=2)
     p1_cum = jnp.cumsum(p1, axis=-1)
     S = p1_cum[..., -1]                                       # (n, t)
 
@@ -47,14 +61,11 @@ def lda_sample_tiles_ref(
 
     target = u2 * total[:, None]
     b_idx = jnp.minimum((bcum[:, None, :] <= target[..., None]).sum(-1), nb - 1)
-    prev = jnp.where(b_idx > 0,
-                     jnp.take_along_axis(bcum[:, None, :].repeat(t, 1),
-                                         jnp.maximum(b_idx - 1, 0)[..., None],
-                                         axis=-1)[..., 0],
-                     0.0)
-    seg = jnp.take_along_axis(
-        blocks[:, None, :, :].repeat(t, 1), b_idx[..., None, None]
-        .repeat(B, -1), axis=2)[:, :, 0, :]                   # (n, t, B)
+    prev = jnp.where(
+        b_idx > 0,
+        jnp.take_along_axis(bcum, jnp.maximum(b_idx - 1, 0), axis=-1),
+        0.0)
+    seg = jnp.take_along_axis(blocks, b_idx[..., None], axis=1)  # (n, t, B)
     seg_cum = jnp.cumsum(seg, axis=-1) + prev[..., None]
     in_b = jnp.minimum((seg_cum <= target[..., None]).sum(-1), B - 1)
     k_dense = b_idx * B + in_b
@@ -63,4 +74,6 @@ def lda_sample_tiles_ref(
     z = jnp.where(use_sparse, k_sparse.astype(jnp.int32),
                   k_dense.astype(jnp.int32))
     z_new = jnp.where(mask, z, z_old)
-    return z_new, (use_sparse & mask).astype(jnp.int32)
+    sparse = (use_sparse & mask).astype(jnp.int32)
+    ssq = jnp.where(mask, S / jnp.maximum(S + Q[:, None], 1e-30), 0.0)
+    return z_new, sparse, ssq

@@ -42,6 +42,63 @@ def _kernel(meta_ref, z_ref, mask_ref, out_ref, *, num_topics: int):
     out_ref[...] += counts.astype(jnp.int32)
 
 
+def _delta_kernel(meta_ref, z_new_ref, z_old_ref, mask_ref, out_ref,
+                  *, num_topics: int):
+    """Incremental variant: counts(z_new) - counts(z_old) per tile, both
+    one-hot MXU passes fused into one grid step (the word's output block is
+    revisited across its tiles exactly like the full rebuild)."""
+    i = pl.program_id(0)
+    first = meta_ref[i, 1]
+
+    m = mask_ref[0].astype(jnp.float32)[:, None]   # (t, 1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, num_topics), 1)
+    oh_new = (z_new_ref[0][:, None] == iota).astype(jnp.float32) * m
+    oh_old = (z_old_ref[0][:, None] == iota).astype(jnp.float32) * m
+    ones = jnp.ones((1, z_new_ref.shape[1]), jnp.float32)
+    delta = jnp.dot(ones, oh_new - oh_old,
+                    preferred_element_type=jnp.float32)        # (1, K) MXU
+
+    @pl.when(first == 1)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += delta.astype(jnp.int32)
+
+
+def phi_delta_tiles(
+    tile_word,    # (n,) int32
+    tile_first,   # (n,) int32 (1 on the first tile of each word run)
+    z_new,        # (n, t) int32
+    z_old,        # (n, t) int32
+    token_mask,   # (n, t) int32
+    num_words: int,
+    num_topics: int,
+    *,
+    interpret: bool = True,
+):
+    """Accumulate the per-iteration phi DELTA (V, K) int32 from word tiles."""
+    n, t = z_new.shape
+    meta = jnp.stack([tile_word.astype(jnp.int32),
+                      tile_first.astype(jnp.int32)], axis=1)   # (n, 2)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, t), lambda i, meta: (i, 0)),
+            pl.BlockSpec((1, t), lambda i, meta: (i, 0)),
+            pl.BlockSpec((1, t), lambda i, meta: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, num_topics), lambda i, meta: (meta[i, 0], 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_delta_kernel, num_topics=num_topics),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_words, num_topics), jnp.int32),
+        interpret=interpret,
+    )(meta, z_new, z_old, token_mask)
+
+
 def phi_update_tiles(
     tile_word,    # (n,) int32
     tile_first,   # (n,) int32 (1 on the first tile of each word run)

@@ -12,3 +12,14 @@ def phi_update_tiles_ref(tile_word, tile_first, z, token_mask,
     inc = (token_mask != 0).reshape(-1).astype(jnp.int32)
     phi = jnp.zeros((num_words, num_topics), jnp.int32)
     return phi.at[words, topics].add(inc)
+
+
+def phi_delta_tiles_ref(tile_word, tile_first, z_new, z_old, token_mask,
+                        num_words: int, num_topics: int):
+    """Incremental oracle == the trainer's own scatter-pass update; a single
+    source keeps the kernel honest against what the trainer actually applies.
+    (``tile_first`` only matters for the kernel's block-revisit protocol.)
+    """
+    from repro.core.updates import phi_delta
+    return phi_delta(z_old, z_new, tile_word, token_mask != 0,
+                     num_words, num_topics)

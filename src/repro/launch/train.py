@@ -28,6 +28,12 @@ def main():
     ap.add_argument("--workload", choices=["lda", "lm"], default="lda")
     ap.add_argument("--arch", default=None)
     ap.add_argument("--mode", choices=["1d", "2d"], default="1d")
+    ap.add_argument("--sampler", choices=["sq", "dense", "pallas"],
+                    default="sq",
+                    help="training sampler backend: the paper's S/Q scan, "
+                         "the O(K) dense baseline, or the fused Pallas "
+                         "kernel sweep (runs on the single-host driver; "
+                         "interpret mode off-TPU)")
     ap.add_argument("--iters", type=int, default=100)
     ap.add_argument("--topics", type=int, default=1024)
     ap.add_argument("--scale", type=float, default=0.0005)
@@ -66,6 +72,39 @@ def run_lda(args):
 
     corpus = read_uci_bow(args.uci) if args.uci else nytimes_like(args.scale)
     n_dev = len(jax.devices())
+    if args.sampler == "pallas":
+        # the fused kernel's chunk plan is host-built from the concrete
+        # tiling, which the shard_map-traced DistributedLDA step can't
+        # provide — run the single-host driver (a mesh-sharded pallas
+        # sweep is the ROADMAP's next training target)
+        if n_dev > 1:
+            print(f"[note] --sampler pallas runs single-host; "
+                  f"ignoring {n_dev - 1} extra devices")
+        from repro.core.corpus import tile_corpus
+        from repro.distributed import checkpoint as ckpt
+        cfg = trainer.LDAConfig(num_topics=args.topics, sampler="pallas")
+        shard = tile_corpus(corpus, 1, cfg.tile_tokens)[0]
+        mgr = CheckpointManager(args.ckpt_dir)
+        fp = corpus_fingerprint(corpus)
+
+        def report(it, state, ll):
+            print(f"iter {it + 1:5d}  LL/token {ll:.4f}")
+            if (it + 1) % args.ckpt_every == 0:
+                z = ckpt.gather_canonical_z(state.z, shard.token_uid,
+                                            corpus.num_tokens)
+                mgr.save(int(state.iteration), z, {"fingerprint": fp})
+
+        # eval cadence must hit every --ckpt-every multiple (the callback
+        # only fires on eval iterations)
+        import math
+        ev = math.gcd(10, max(1, args.ckpt_every))
+        res = trainer.train(corpus, cfg, args.iters, eval_every=ev,
+                            shard=shard, callback=report)
+        mgr.wait()
+        tps = sorted(res.tokens_per_sec)[len(res.tokens_per_sec) // 2]
+        print(f"[done] compile {res.compile_sec:.1f}s  "
+              f"median {tps / 1e6:.3f}M tok/s")
+        return
     if args.mode == "1d":
         mesh = jax.make_mesh((n_dev,), ("data",))
         dl_kw = dict(mode="1d", doc_axes=("data",), word_axes=())
@@ -74,7 +113,7 @@ def run_lda(args):
         mesh = jax.make_mesh((md, n_dev // md), ("data", "model"))
         dl_kw = dict(mode="2d", doc_axes=("data",), word_axes=("model",))
 
-    cfg = trainer.LDAConfig(num_topics=args.topics)
+    cfg = trainer.LDAConfig(num_topics=args.topics, sampler=args.sampler)
     dl = DistributedLDA(cfg, mesh, corpus, **dl_kw)
     mgr = CheckpointManager(args.ckpt_dir)
     fp = corpus_fingerprint(corpus)

@@ -39,14 +39,15 @@ def setup_case(K, tile_tokens, num_docs=24, num_words=48, seed=0,
 def test_lda_sample_kernel_matches_ref(K, tile_tokens):
     corpus, shard, z, phi, phi_sum, cnts, tpcs, key = setup_case(K, tile_tokens)
     kw = dict(alpha=50.0 / K, beta=0.01, num_words_total=corpus.num_words)
-    zk, fk = sample_ops.lda_sample(shard.tile_word, shard.token_doc,
+    zk, sk = sample_ops.lda_sample(shard.tile_word, shard.token_doc,
                                    shard.token_mask, z, phi, phi_sum,
                                    cnts, tpcs, key, impl="pallas", **kw)
-    zr, fr = sample_ops.lda_sample(shard.tile_word, shard.token_doc,
+    zr, sr = sample_ops.lda_sample(shard.tile_word, shard.token_doc,
                                    shard.token_mask, z, phi, phi_sum,
                                    cnts, tpcs, key, impl="ref", **kw)
     np.testing.assert_array_equal(np.asarray(zk), np.asarray(zr))
-    assert abs(float(fk) - float(fr)) < 1e-6
+    assert abs(float(sk.sparse_frac) - float(sr.sparse_frac)) < 1e-6
+    assert abs(float(sk.mean_s_over_sq) - float(sr.mean_s_over_sq)) < 1e-6
 
 
 @pytest.mark.parametrize("K", [96, 192])  # non-128-multiple -> fallback block
@@ -74,13 +75,28 @@ def test_lda_sample_dtypes(topic_dtype):
     assert int(zk.max()) < 128 and int(zk.min()) >= 0
 
 
+@pytest.mark.parametrize("tiles_per_step", [1, 8, 64])
+def test_lda_sample_chunk_width_invariant(tiles_per_step):
+    """Multi-tile grid steps never change the draws (per-tile uniforms)."""
+    corpus, shard, z, phi, phi_sum, cnts, tpcs, key = setup_case(128, 16)
+    kw = dict(alpha=0.4, beta=0.01, num_words_total=corpus.num_words)
+    z1, _ = sample_ops.lda_sample(shard.tile_word, shard.token_doc,
+                                  shard.token_mask, z, phi, phi_sum, cnts,
+                                  tpcs, key, impl="pallas",
+                                  tiles_per_step=tiles_per_step, **kw)
+    zr, _ = sample_ops.lda_sample(shard.tile_word, shard.token_doc,
+                                  shard.token_mask, z, phi, phi_sum, cnts,
+                                  tpcs, key, impl="ref", **kw)
+    np.testing.assert_array_equal(np.asarray(z1), np.asarray(zr))
+
+
 def test_lda_sample_matches_core_sampler():
     """Kernel == repro.core.sampler given the same uniforms (C4/C5/C7)."""
     from repro.core import sampler as core
     corpus, shard, z, phi, phi_sum, cnts, tpcs, key = setup_case(256, 32)
     kw = dict(alpha=0.2, beta=0.01, num_words_total=corpus.num_words)
     n, t = z.shape
-    uni = jax.random.uniform(key, (n, t, 2), jnp.float32)
+    uni = core.draw_sweep_uniforms(key, n, t)   # the sweep's shared contract
     zc = jnp.stack([
         core.sample_one_tile(phi[shard.tile_word[i]], phi_sum,
                              shard.token_doc[i], shard.token_mask[i],
@@ -90,6 +106,48 @@ def test_lda_sample_matches_core_sampler():
                                   shard.token_mask, z, phi, phi_sum,
                                   cnts, tpcs, key, impl="pallas", **kw)
     np.testing.assert_array_equal(np.asarray(zc), np.asarray(zk))
+
+
+def _collect_shapes(jaxpr, acc):
+    """Every intermediate's shape, recursing into nested jaxprs (pjit,
+    scan, cond, pallas_call kernels, ...)."""
+    for eqn in jaxpr.eqns:
+        for v in eqn.outvars:
+            aval = getattr(v, "aval", None)
+            if aval is not None and hasattr(aval, "shape"):
+                acc.append(tuple(aval.shape))
+        for p in eqn.params.values():
+            subs = p if isinstance(p, (tuple, list)) else (p,)
+            for sub in subs:
+                if isinstance(sub, jax.core.ClosedJaxpr):
+                    _collect_shapes(sub.jaxpr, acc)
+                elif isinstance(sub, jax.core.Jaxpr):
+                    _collect_shapes(sub, acc)
+    return acc
+
+
+def test_no_hbm_ell_gather():
+    """The wrapper must not materialize the per-token (n, t, P) ELL tensor
+    anywhere outside the kernel's per-chunk VMEM working set: jaxpr shape
+    accounting over the whole trace (ISSUE 5 acceptance criterion)."""
+    corpus, shard, z, phi, phi_sum, cnts, tpcs, key = setup_case(128, 16)
+    n, t = z.shape
+    P = cnts.shape[1]
+    C = 4
+    kw = dict(alpha=0.5, beta=0.01, num_words_total=corpus.num_words)
+    plan = sample_ops.build_chunk_plan(shard.token_doc, C)
+    jaxpr = jax.make_jaxpr(
+        lambda *a: sample_ops.lda_sample(*a, impl="pallas",
+                                         tiles_per_step=C, plan=plan, **kw)
+    )(shard.tile_word, shard.token_doc, shard.token_mask, z, phi, phi_sum,
+      cnts, tpcs, key)
+    shapes = _collect_shapes(jaxpr.jaxpr, [])
+    assert n > C  # the accounting below is vacuous otherwise
+    bad = [s for s in shapes if len(s) == 3 and s[-1] == P and s[-2] == t
+           and s[0] >= n]
+    assert not bad, f"per-token HBM ELL gather reappeared: {bad}"
+    # ... while the kernel's on-chip working set IS chunk-sized
+    assert any(s == (C, t, P) for s in shapes)
 
 
 @pytest.mark.parametrize("K", [128, 256])
@@ -104,6 +162,28 @@ def test_phi_update_kernel_matches_ref(K, tile_tokens):
                             num_topics=K, impl="ref")
     np.testing.assert_array_equal(np.asarray(dk), np.asarray(dr))
     assert int(dk.sum()) == corpus.num_tokens
+
+
+@pytest.mark.parametrize("K", [128, 192])
+def test_phi_delta_kernel_matches_ref(K):
+    """Incremental MXU update == signed scatter oracle == rebuild diff."""
+    corpus, shard, z, phi, phi_sum, cnts, tpcs, key = setup_case(K, 16)
+    n, t = z.shape
+    z_new = jax.random.randint(jax.random.key(9), (n, t), 0, K,
+                               jnp.int32).astype(z.dtype)
+    dk = phi_ops.phi_delta(shard.tile_word, shard.tile_first, z, z_new,
+                           shard.token_mask, num_words=corpus.num_words,
+                           num_topics=K, impl="pallas")
+    dr = phi_ops.phi_delta(shard.tile_word, shard.tile_first, z, z_new,
+                           shard.token_mask, num_words=corpus.num_words,
+                           num_topics=K, impl="ref")
+    np.testing.assert_array_equal(np.asarray(dk), np.asarray(dr))
+    want = (updates.phi_from_z(z_new, shard.tile_word, shard.token_mask,
+                               corpus.num_words, K)
+            - updates.phi_from_z(z, shard.tile_word, shard.token_mask,
+                                 corpus.num_words, K))
+    np.testing.assert_array_equal(np.asarray(dk), np.asarray(want))
+    assert int(dk.sum()) == 0  # moves conserve the token count
 
 
 def test_phi_update_heavy_word_spanning_tiles():
@@ -142,11 +222,11 @@ def test_kernel_iteration_converges(tiny_corpus):
         z_new, _ = sample_ops.lda_sample(
             shard.tile_word, shard.token_doc, shard.token_mask, state.z,
             state.phi_vk, state.phi_sum, cnts, tpcs,
-            jax.random.fold_in(key, it), impl="pallas", **kw)
-        phi = phi_ops.phi_update(shard.tile_word, shard.tile_first, z_new,
-                                 shard.token_mask,
-                                 num_words=tiny_corpus.num_words, num_topics=K,
-                                 impl="pallas")
+            jax.random.fold_in(key, it), impl="pallas", tiles_per_step=8, **kw)
+        phi = state.phi_vk + phi_ops.phi_delta(
+            shard.tile_word, shard.tile_first, state.z, z_new,
+            shard.token_mask, num_words=tiny_corpus.num_words, num_topics=K,
+            impl="pallas")
         state = trainer.LDAState(z=z_new, phi_vk=phi, phi_sum=phi.sum(0),
                                  iteration=state.iteration + 1)
         ll = float(trainer.log_likelihood(cfg, shard, state)) / tiny_corpus.num_tokens
