@@ -1,8 +1,16 @@
-"""Shared benchmark utilities: timing + CSV emission."""
+"""Shared benchmark utilities: timing, CSV emission, and the one BENCH
+artifact schema every benchmark JSON (serving AND training) is written in.
+
+``BENCH_SCHEMA`` is asserted by the CI bench-smoke job: both
+``BENCH_serving.json`` and ``BENCH_training.json`` must carry the same
+common fields so the perf trajectory stays machine-comparable across PRs.
+"""
 import sys
 import time
 
 sys.path.insert(0, "src")
+
+BENCH_SCHEMA = "repro-bench/v1"
 
 
 def timeit(fn, *args, warmup: int = 1, iters: int = 3):
@@ -21,3 +29,42 @@ def timeit(fn, *args, warmup: int = 1, iters: int = 3):
 
 def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def bench_payload(bench: str, rows: list, tiny: bool = False,
+                  **extra) -> dict:
+    """The shared BENCH artifact envelope (schema + environment + rows)."""
+    import jax
+
+    return {"schema": BENCH_SCHEMA, "bench": bench, "tiny": tiny,
+            "jax": jax.__version__, "backend": jax.default_backend(),
+            "devices": jax.local_device_count(), "rows": rows, **extra}
+
+
+def write_bench_json(path: str, bench: str, rows: list, tiny: bool = False,
+                     **extra) -> str:
+    import json
+
+    with open(path, "w") as f:
+        json.dump(bench_payload(bench, rows, tiny, **extra), f, indent=1)
+    print(f"# wrote {len(rows)} rows to {path}")
+    return path
+
+
+def paired_overhead_pct(run_baseline, run_instrumented, repeats: int = 5):
+    """Observer effect, measured: alternate baseline/instrumented runs and
+    compare their median wall times.  Returns (pct, median_base_s,
+    median_inst_s); pct is clamped at 0 (noise can make the instrumented
+    median come out *faster*)."""
+    base, inst = [], []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        run_baseline()
+        base.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        run_instrumented()
+        inst.append(time.perf_counter() - t0)
+    base.sort()
+    inst.sort()
+    mb, mi = base[len(base) // 2], inst[len(inst) // 2]
+    return max(0.0, (mi - mb) / mb * 100.0), mb, mi

@@ -23,15 +23,22 @@ sharded rows time host-platform devices — they validate the paths end to
 end; the on-chip win is a hardware number.  The bytes-moved numbers are
 shape-true on any platform.
 
-``--json PATH`` additionally records every row as JSON (the CI bench-smoke
-job uploads it as a workflow artifact); ``--tiny`` shrinks the sweep to a
-seconds-scale CI config.
+The sweep ends with an ``obs_overhead_serving`` row — the *measured*
+observer effect of the ``repro.obs`` instrumentation: the same request
+storm through an engine with the real metrics registry + span tracer vs the
+no-op bundle, alternating runs, medians compared.  The row asserts the
+overhead stays under 2% of the serving hot path.
+
+``--json PATH`` additionally records every row as JSON in the shared BENCH
+schema (``common.write_bench_json``; the CI bench-smoke job uploads it as a
+workflow artifact); ``--tiny`` shrinks the sweep to a seconds-scale CI
+config.
 """
 import dataclasses
 
 import numpy as np
 
-from .common import emit, timeit
+from .common import emit, paired_overhead_pct, timeit, write_bench_json
 
 IMPLS = ("xla", "pallas", "ref")
 
@@ -66,6 +73,50 @@ def _engine_storm(snap, infer_cfg, L, rng, tag, n_docs=64, check_h2d=False):
           comm_bytes=s["comm_bytes_moved"])
     eng.stop()
     return s
+
+
+def _obs_overhead_row(snap, infer_cfg, L, rng, tiny):
+    """Instrumented vs no-op-registry engine throughput on one storm.
+
+    The instrumentation cost is a fixed ~µs-scale tax per request/batch, so
+    the ratio only means something against a *representative* sweep — the
+    tiny bench configs shrink burn-in/samples to the point where the Gibbs
+    sweep itself is microseconds.  Restore a serving-realistic sweep depth
+    for this row (it is still sub-second end to end).
+    """
+    from repro.obs import Observability
+    from repro.serve import EngineConfig, HotSwapModel, LDAServeEngine
+
+    infer_cfg = dataclasses.replace(infer_cfg, burn_in=24, samples=8)
+    n_docs = 48 if tiny else 96
+    V = snap.num_words
+    docs = [rng.integers(0, V, L).astype(np.int32) for _ in range(n_docs)]
+
+    def storm(obs_factory):
+        def run_once():
+            eng = LDAServeEngine(
+                HotSwapModel(snap),
+                EngineConfig(max_batch=8, max_delay_ms=1.0,
+                             length_buckets=(L,), infer=infer_cfg),
+                obs=obs_factory())
+            try:
+                eng.infer(docs[0])
+                eng.infer_many(docs)
+            finally:
+                eng.stop()
+        return run_once
+
+    storm(Observability.noop)()      # warm the jit caches outside the timing
+    pct, mb, mi = paired_overhead_pct(
+        storm(Observability.noop), storm(Observability.default), repeats=5)
+    if pct >= 2.0:   # one retry at higher repeats before declaring a regression
+        pct, mb, mi = paired_overhead_pct(
+            storm(Observability.noop), storm(Observability.default),
+            repeats=9)
+    _emit("obs_overhead_serving", mi * 1e6,
+          f"overhead_pct={pct:.2f} baseline_s={mb:.4f} docs={n_docs}",
+          overhead_pct=round(pct, 2), baseline_s=round(mb, 4))
+    assert pct < 2.0, f"observer effect {pct:.2f}% >= 2% on the serving path"
 
 
 def run(impls=IMPLS, tiny=False):
@@ -145,11 +196,14 @@ def run(impls=IMPLS, tiny=False):
             # the meter must have run whenever shards actually exchanged data
             assert n_shards == 1 or s["comm_bytes_moved"] > 0, s
 
+    # measured observer effect of the repro.obs instrumentation on the
+    # dense engine path (the last K point's snapshot is still in scope)
+    _obs_overhead_row(snap, infer, L, rng, tiny)
+
 
 def main(argv=None) -> int:
     """Standalone entry: ``python -m benchmarks.serving --impl pallas``."""
     import argparse
-    import json
 
     global _ROWS
 
@@ -166,14 +220,7 @@ def main(argv=None) -> int:
     print("name,us_per_call,derived")
     run(impls=tuple(args.impl), tiny=args.tiny)
     if args.json:
-        import jax
-
-        with open(args.json, "w") as f:
-            json.dump({"bench": "serving", "tiny": args.tiny,
-                       "jax": jax.__version__,
-                       "devices": jax.local_device_count(),
-                       "rows": _ROWS}, f, indent=1)
-        print(f"# wrote {len(_ROWS)} rows to {args.json}")
+        write_bench_json(args.json, "serving", _ROWS, tiny=args.tiny)
     return 0
 
 

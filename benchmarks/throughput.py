@@ -9,16 +9,23 @@ is a hardware number).  Timings are of the AOT-compiled iteration only
 TPU-v5e projected tokens/sec from the compiled HLO bytes (LDA is memory
 bound, so tokens/sec ~ HBM_BW / bytes-per-token).
 
-``--json PATH`` records every row as JSON — the CI bench-smoke job uploads
-it as ``BENCH_training.json``, the training-side twin of
-``BENCH_serving.json``; ``--tiny`` shrinks the corpus to a seconds-scale CI
-config.
+The sweep ends with an ``obs_overhead_training`` row — the measured
+observer effect of the ``repro.obs`` instrumentation on the training loop:
+``trainer.train`` with the real registry + tracer vs the no-op bundle,
+alternating runs, per-iteration medians compared (compile time excluded on
+both sides).  The row asserts the overhead stays under 2%.
+
+``--json PATH`` records every row as JSON in the shared BENCH schema
+(``common.write_bench_json``) — the CI bench-smoke job uploads it as
+``BENCH_training.json``, the training-side twin of ``BENCH_serving.json``
+(same envelope, asserted by CI); ``--tiny`` shrinks the corpus to a
+seconds-scale CI config.
 """
 import dataclasses
 import functools
 import time
 
-from .common import emit, timeit
+from .common import emit, timeit, write_bench_json
 
 SAMPLERS = ("dense", "sq", "pallas")
 
@@ -30,6 +37,53 @@ def _emit(name: str, us: float, derived: str, **extra):
     if _ROWS is not None:
         _ROWS.append(dict(name=name, us_per_call=round(us, 1),
                           derived=derived, **extra))
+
+
+def _obs_overhead_row(tiny):
+    """Instrumented vs no-op ``trainer.train``, per-iteration medians.
+
+    ``paired_overhead_pct`` times whole calls; here each ``train`` call
+    re-AOT-compiles, so we instead compare the *per-iteration* medians the
+    trainer itself reports (its timing loop starts after compile) — the
+    alternation discipline is the same.
+    """
+    from repro.core import trainer
+    from repro.core.corpus import ell_capacity
+    from repro.data.synthetic import zipf_corpus
+    from repro.obs import Observability
+
+    # big enough that one iteration is ~10ms+ of sampling — the per-iteration
+    # instrumentation tax is fixed µs-scale, so a too-small corpus would
+    # inflate the ratio into pure noise
+    corpus = zipf_corpus(num_docs=192, num_words=160, avg_doc_len=48, seed=1)
+    K = 64
+    cfg = trainer.LDAConfig(num_topics=K, tile_tokens=64, tiles_per_step=8,
+                            ell_capacity=ell_capacity(corpus, K))
+    iters = 6 if tiny else 10
+
+    def iter_s(obs):
+        res = trainer.train(corpus, cfg, iters, eval_every=iters, obs=obs)
+        med_tps = sorted(res.tokens_per_sec)[iters // 2]
+        return corpus.num_tokens / med_tps
+
+    def measure(repeats):
+        base, inst = [], []
+        for _ in range(repeats):
+            base.append(iter_s(Observability.noop()))
+            inst.append(iter_s(Observability.default(trace=True)))
+        base.sort()
+        inst.sort()
+        mb, mi = base[len(base) // 2], inst[len(inst) // 2]
+        return max(0.0, (mi - mb) / mb * 100.0), mb, mi
+
+    iter_s(Observability.noop())     # warm any lazy imports outside timing
+    pct, mb, mi = measure(3 if tiny else 5)
+    if pct >= 2.0:   # one retry at higher repeats before declaring a regression
+        pct, mb, mi = measure(7)
+    _emit("obs_overhead_training", mi * 1e6,
+          f"overhead_pct={pct:.2f} baseline_iter_ms={mb * 1e3:.2f}",
+          overhead_pct=round(pct, 2), baseline_iter_ms=round(mb * 1e3, 3))
+    assert pct < 2.0, f"observer effect {pct:.2f}% >= 2% on the training loop"
 
 
 def run(samplers=SAMPLERS, tiny=False):
@@ -81,11 +135,13 @@ def run(samplers=SAMPLERS, tiny=False):
                   f"bytes_per_token={bpt:.0f};projected_tokens_per_sec={proj:.3g}",
                   sampler=which, projected_tokens_per_sec=proj)
 
+    # measured observer effect of the repro.obs instrumentation
+    _obs_overhead_row(tiny)
+
 
 def main(argv=None) -> int:
     """Standalone entry: ``python -m benchmarks.throughput --tiny --json ...``."""
     import argparse
-    import json
 
     global _ROWS
 
@@ -103,14 +159,8 @@ def main(argv=None) -> int:
     print("name,us_per_call,derived")
     run(samplers=tuple(args.sampler), tiny=args.tiny)
     if args.json:
-        import jax
-
-        with open(args.json, "w") as f:
-            json.dump({"bench": "training_throughput", "tiny": args.tiny,
-                       "jax": jax.__version__,
-                       "backend": jax.default_backend(),
-                       "rows": _ROWS}, f, indent=1)
-        print(f"# wrote {len(_ROWS)} rows to {args.json}")
+        write_bench_json(args.json, "training_throughput", _ROWS,
+                         tiny=args.tiny)
     return 0
 
 

@@ -142,7 +142,12 @@ def lda_iteration(
     for ax in (tuple(data_axes or ()) + tuple(model_axes or ())):
         key = jax.random.fold_in(key, jax.lax.axis_index(ax))
 
-    theta, ell_c, ell_t, overflow = _build_theta_ell(cfg, shard, state.z, model_axes)
+    # jax.named_scope phase names (plan / sample / phi_delta / sync) are pure
+    # HLO metadata: they make device profiles line up with the host spans
+    # repro.obs records, and cannot change draws.
+    with jax.named_scope("lda.plan"):
+        theta, ell_c, ell_t, overflow = _build_theta_ell(
+            cfg, shard, state.z, model_axes)
 
     n, t = state.z.shape
     M = cfg.micro_chunks
@@ -151,26 +156,30 @@ def lda_iteration(
 
     if M == 1:  # WorkSchedule1: whole shard resident, one sweep
         if cfg.sampler == "sq":
-            z_new, stats = sampler.sample_sweep(
-                state.phi_vk, state.phi_sum, shard.tile_word, shard.token_doc,
-                shard.token_mask, state.z, ell_c, ell_t, key,
-                tiles_per_step=min(cfg.tiles_per_step, n), **sweep_kwargs)
+            with jax.named_scope("lda.sample"):
+                z_new, stats = sampler.sample_sweep(
+                    state.phi_vk, state.phi_sum, shard.tile_word,
+                    shard.token_doc, shard.token_mask, state.z, ell_c, ell_t,
+                    key, tiles_per_step=min(cfg.tiles_per_step, n),
+                    **sweep_kwargs)
             sparse_frac = stats.sparse_frac
             mean_ssq = stats.mean_s_over_sq
         elif cfg.sampler == "pallas":
             from ..kernels.lda_sample import ops as lda_kernel
-            z_new, stats = lda_kernel.lda_sample(
-                shard.tile_word, shard.token_doc, shard.token_mask, state.z,
-                state.phi_vk, state.phi_sum, ell_c, ell_t, key,
-                tiles_per_step=min(cfg.tiles_per_step, n),
-                interpret=cfg.kernel_interpret(), **sweep_kwargs)
+            with jax.named_scope("lda.sample"):
+                z_new, stats = lda_kernel.lda_sample(
+                    shard.tile_word, shard.token_doc, shard.token_mask,
+                    state.z, state.phi_vk, state.phi_sum, ell_c, ell_t, key,
+                    tiles_per_step=min(cfg.tiles_per_step, n),
+                    interpret=cfg.kernel_interpret(), **sweep_kwargs)
             sparse_frac = stats.sparse_frac
             mean_ssq = stats.mean_s_over_sq
         else:
-            z_new = dense_sampler.sample_sweep_dense(
-                state.phi_vk, state.phi_sum, shard.tile_word, shard.token_doc,
-                shard.token_mask, state.z, theta, key,
-                tiles_per_step=min(cfg.tiles_per_step, n), **sweep_kwargs)
+            with jax.named_scope("lda.sample"):
+                z_new = dense_sampler.sample_sweep_dense(
+                    state.phi_vk, state.phi_sum, shard.tile_word,
+                    shard.token_doc, shard.token_mask, state.z, theta, key,
+                    tiles_per_step=min(cfg.tiles_per_step, n), **sweep_kwargs)
             sparse_frac = jnp.float32(0)
             mean_ssq = jnp.float32(0)
     else:  # WorkSchedule2: M micro-chunks, theta refreshed between chunks
@@ -205,11 +214,12 @@ def lda_iteration(
                 sl = slice(m * nc, (m + 1) * nc)
                 cnts, tpcs = jax.lax.top_k(theta_c, P)
                 plan = lda_kernel.build_chunk_plan(td_np[sl], C)
-                z_c, st = lda_kernel.lda_sample(
-                    tw_a[sl], td_a[sl], tm_a[sl], z_a[sl],
-                    state.phi_vk, state.phi_sum, cnts, tpcs, keys_m[m],
-                    plan=plan, interpret=cfg.kernel_interpret(),
-                    **sweep_kwargs)
+                with jax.named_scope("lda.sample"):
+                    z_c, st = lda_kernel.lda_sample(
+                        tw_a[sl], td_a[sl], tm_a[sl], z_a[sl],
+                        state.phi_vk, state.phi_sum, cnts, tpcs, keys_m[m],
+                        plan=plan, interpret=cfg.kernel_interpret(),
+                        **sweep_kwargs)
                 delta = updates.theta_delta(z_a[sl], z_c, td_a[sl], tm_a[sl],
                                             theta_c.shape[0], K)
                 theta_c = theta_c + sync.sync_theta(delta, model_axes)
@@ -245,7 +255,8 @@ def lda_iteration(
                 z_a.reshape(M, nc, t),
                 jax.random.split(key, M),
             )
-            _, (z_chunks, sfs, ssqs) = jax.lax.scan(chunk_step, theta, xs)
+            with jax.named_scope("lda.sample"):
+                _, (z_chunks, sfs, ssqs) = jax.lax.scan(chunk_step, theta, xs)
             z_new = z_chunks.reshape(n + n_pad, t)[:n]
             sparse_frac = sfs.mean()
             mean_ssq = ssqs.mean()
@@ -254,23 +265,25 @@ def lda_iteration(
     # over the sweep's moves instead of a full count rebuild (and instead of
     # the TWO rebuilds the compressed_sync branch used to pay); exact in int
     # arithmetic, phi_old + delta == rebuild(z_new).
-    if cfg.sampler == "pallas":
-        from ..kernels.phi_update import ops as phi_kernel
-        delta = phi_kernel.phi_delta(
-            shard.tile_word, shard.tile_first, state.z, z_new,
-            shard.token_mask, num_words=shard.num_words, num_topics=K,
-            interpret=cfg.kernel_interpret())
-    else:
-        delta = updates.phi_delta(state.z, z_new, shard.tile_word,
-                                  shard.token_mask, shard.num_words, K)
-    if cfg.compressed_sync and data_axes:
-        # beyond-paper: all-reduce the int16 per-iteration DELTA instead of
-        # rebuilt int32 counts — half the bytes (C7 applied to the wire).
-        # Exact while the global per-entry flux fits int16 (see sync.py).
-        phi = state.phi_vk + sync.compressed_sync_phi(delta, data_axes)
-    else:
-        phi = state.phi_vk + sync.sync_phi(delta, data_axes)
-    phi_sum = sync.global_phi_sum(phi, model_axes)
+    with jax.named_scope("lda.phi_delta"):
+        if cfg.sampler == "pallas":
+            from ..kernels.phi_update import ops as phi_kernel
+            delta = phi_kernel.phi_delta(
+                shard.tile_word, shard.tile_first, state.z, z_new,
+                shard.token_mask, num_words=shard.num_words, num_topics=K,
+                interpret=cfg.kernel_interpret())
+        else:
+            delta = updates.phi_delta(state.z, z_new, shard.tile_word,
+                                      shard.token_mask, shard.num_words, K)
+    with jax.named_scope("lda.sync"):
+        if cfg.compressed_sync and data_axes:
+            # beyond-paper: all-reduce the int16 per-iteration DELTA instead
+            # of rebuilt int32 counts — half the bytes (C7 on the wire).
+            # Exact while the global per-entry flux fits int16 (see sync.py).
+            phi = state.phi_vk + sync.compressed_sync_phi(delta, data_axes)
+        else:
+            phi = state.phi_vk + sync.sync_phi(delta, data_axes)
+        phi_sum = sync.global_phi_sum(phi, model_axes)
     new_state = LDAState(z=z_new, phi_vk=phi, phi_sum=phi_sum,
                          iteration=state.iteration + 1)
     return new_state, IterStats(sparse_frac=sparse_frac,
@@ -319,8 +332,32 @@ def train(
     eval_every: int = 1,
     shard: TiledCorpusShard | None = None,
     callback: Callable[[int, LDAState, float], None] | None = None,
+    obs=None,                      # repro.obs.Observability
+    metrics_out: str | None = None,  # per-iteration JSONL sink path
 ) -> TrainResult:
-    """Single-device end-to-end driver."""
+    """Single-device end-to-end driver.
+
+    Telemetry is host-side only (``repro.obs``): per-iteration counters and
+    latency histograms in ``obs.registry``, ``sample``/``eval`` phase spans
+    in ``obs.tracer`` (device-side phase names come from the
+    ``jax.named_scope`` annotations inside ``lda_iteration``), and — when
+    ``metrics_out`` is given — one JSONL row per iteration.  None of it
+    touches keys or traced values, so draws are bit-identical to an
+    uninstrumented run (pinned in tests/test_obs.py).
+    """
+    from repro.obs import JsonlSink, NULL_SINK, Observability
+
+    obs = obs if obs is not None else Observability.default(trace=False)
+    reg, tracer = obs.registry, obs.tracer
+    m_iters = reg.counter("repro_train_iterations_total", "sweeps completed")
+    m_tokens = reg.counter("repro_train_tokens_sampled_total",
+                           "tokens resampled (iterations * corpus tokens)")
+    m_iter_ms = reg.histogram("repro_train_iteration_ms",
+                              "wall time per training iteration")
+    g_tps = reg.gauge("repro_train_tokens_per_sec", "last iteration's rate")
+    g_ll = reg.gauge("repro_train_ll_per_token", "last evaluated joint LL")
+    sink = JsonlSink(metrics_out) if metrics_out else NULL_SINK
+
     if shard is None:
         shard = tile_corpus(corpus, 1, cfg.tile_tokens)[0]
     if cfg.ell_capacity is None:
@@ -332,26 +369,42 @@ def train(
     # time, polluting the first row of every throughput trajectory.  Compile
     # is reported separately instead.
     t0 = time.perf_counter()
-    step = jax.jit(functools.partial(lda_iteration, cfg, shard)
-                   ).lower(state, key).compile()
+    with tracer.span("compile", sampler=cfg.sampler):
+        step = jax.jit(functools.partial(lda_iteration, cfg, shard)
+                       ).lower(state, key).compile()
     compile_sec = time.perf_counter() - t0
     ll_fn = jax.jit(functools.partial(log_likelihood, cfg, shard))
 
     lls: list[float] = []
     tps: list[float] = []
     st: list[tuple[float, float, float]] = []
-    for it in range(num_iterations):
-        t0 = time.perf_counter()
-        state, stats = step(state, key)
-        state.z.block_until_ready()
-        dt = time.perf_counter() - t0
-        tps.append(shard.num_tokens / dt)
-        st.append((float(stats.sparse_frac), float(stats.ell_overflow),
-                   float(stats.mean_s_over_sq)))
-        if (it + 1) % eval_every == 0 or it == num_iterations - 1:
-            ll = float(ll_fn(state)) / corpus.num_tokens
-            lls.append(ll)
-            if callback:
-                callback(it, state, ll)
+    try:
+        for it in range(num_iterations):
+            t0 = time.perf_counter()
+            with tracer.span("sample", iteration=it):
+                state, stats = step(state, key)
+                state.z.block_until_ready()
+            dt = time.perf_counter() - t0
+            tps.append(shard.num_tokens / dt)
+            st.append((float(stats.sparse_frac), float(stats.ell_overflow),
+                       float(stats.mean_s_over_sq)))
+            m_iters.inc()
+            m_tokens.inc(shard.num_tokens)
+            m_iter_ms.observe(dt * 1e3)
+            g_tps.set(tps[-1])
+            ll = None
+            if (it + 1) % eval_every == 0 or it == num_iterations - 1:
+                with tracer.span("eval", iteration=it):
+                    ll = float(ll_fn(state)) / corpus.num_tokens
+                lls.append(ll)
+                g_ll.set(ll)
+                if callback:
+                    callback(it, state, ll)
+            sink.write(dict(iteration=it, seconds=dt,
+                            tokens=shard.num_tokens, tokens_per_sec=tps[-1],
+                            sparse_frac=st[-1][0], ell_overflow=st[-1][1],
+                            mean_s_over_sq=st[-1][2], ll_per_token=ll))
+    finally:
+        sink.close()
     return TrainResult(state=state, ll_per_token=lls, tokens_per_sec=tps,
                        stats=st, compile_sec=compile_sec)

@@ -15,7 +15,13 @@ HTTP JSON endpoint (stdlib only):
     PYTHONPATH=src python -m repro.launch.serve_lda --snapshot /tmp/lda.npz --port 8080
     POST /infer  {"tokens": [3, 17, ...]}            -> theta + top topics
     POST /swap   {"snapshot": "/path/to/newer.npz"}  -> hot-swap, no restart
-    GET  /stats | /healthz
+    GET  /metrics    -> Prometheus text exposition (repro.obs registry)
+    GET  /stats      -> engine stats + queue depth, jit cache, device memory
+    GET  /trace      -> Chrome trace JSON of the serving phase spans
+    GET  /healthz
+
+``--trace-out`` / ``--metrics-out`` additionally write the trace JSON and a
+final metrics dump at shutdown (bench mode: after the storm).
 """
 from __future__ import annotations
 
@@ -60,6 +66,17 @@ def build_argparser() -> argparse.ArgumentParser:
                          "with tokens, not B*L*K), 'auto' uses the "
                          "snapshot's own tag; draws are bit-identical "
                          "either way")
+    # observability
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the serving phase-span trace (Chrome trace "
+                         "JSON, Perfetto-loadable) at shutdown / bench end")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write a final JSON dump of stats + the metrics "
+                         "registry at shutdown / bench end")
+    ap.add_argument("--no-trace", action="store_true",
+                    help="disable phase-span recording (GET /trace returns "
+                         "an empty trace; the bounded ring buffer is cheap, "
+                         "so tracing is on by default)")
     # bench-mode training knobs
     ap.add_argument("--topics", type=int, default=32)
     ap.add_argument("--train-iters", type=int, default=25)
@@ -79,6 +96,7 @@ def load_model(args, path: str | None = None):
 
 
 def make_engine(args, snap):
+    from repro.obs import Observability
     from repro.serve import EngineConfig, HotSwapModel, InferConfig, LDAServeEngine
 
     model = HotSwapModel(snap)
@@ -87,7 +105,45 @@ def make_engine(args, snap):
         length_buckets=tuple(args.length_buckets),
         infer=InferConfig(burn_in=args.burn_in, samples=args.samples,
                           top_k=args.top_k, impl=args.impl, comm=args.comm))
-    return model, LDAServeEngine(model, cfg, seed=args.seed)
+    obs = Observability.default(trace=not getattr(args, "no_trace", False))
+    return model, LDAServeEngine(model, cfg, seed=args.seed, obs=obs)
+
+
+def device_memory_stats() -> dict:
+    """Per-device ``memory_stats()`` (bytes in use / limit); backends that
+    don't expose it (CPU) report an empty dict per device."""
+    import jax
+
+    out = {}
+    for d in jax.local_devices():
+        try:
+            out[str(d)] = d.memory_stats() or {}
+        except Exception:
+            out[str(d)] = {}
+    return out
+
+
+def enriched_stats(model, engine) -> dict:
+    """``engine.stats()`` + serving context: model version/shape and device
+    memory (queue depth + jit cache size are already in stats())."""
+    snap = model.acquire()[1]
+    s = engine.stats()
+    s.update(model_version=model.version, num_words=snap.num_words,
+             num_topics=snap.num_topics,
+             device_memory=device_memory_stats())
+    return s
+
+
+def _dump_obs(args, model, engine):
+    """Honor --trace-out / --metrics-out at shutdown or bench end."""
+    if args.trace_out:
+        print(f"[obs] trace -> {engine.obs.tracer.export(args.trace_out)}")
+    if args.metrics_out:
+        payload = dict(stats=enriched_stats(model, engine),
+                       registry=engine.obs.registry.snapshot())
+        with open(args.metrics_out, "w") as f:
+            json.dump(payload, f, indent=1, default=str)
+        print(f"[obs] metrics -> {args.metrics_out}")
 
 
 # ---------------------------------------------------------------------------
@@ -169,6 +225,9 @@ def run_bench(args) -> int:
     print(f"[bench] hot-swapped to model_version={v} without restart; "
           f"max |Δtheta|₁ across redone docs = {moved:.3f}")
     assert results2[0]["model_version"] == v
+    print(f"[bench] sliding-window rate {stats['docs_per_sec_window']:.1f} "
+          f"docs/sec (lifetime {stats['docs_per_sec']:.1f})")
+    _dump_obs(args, model, engine)
     engine.stop()
     return 0
 
@@ -177,19 +236,19 @@ def run_bench(args) -> int:
 # HTTP mode (stdlib only — no framework deps)
 # ---------------------------------------------------------------------------
 
-def run_http(args) -> int:
+def make_http_server(args, model, engine):
+    """Build (not start) the ThreadingHTTPServer — separated from
+    ``run_http`` so tests can bind port 0 and drive the real endpoints."""
     from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
-
-    snap = load_model(args)
-    model, engine = make_engine(args, snap)
-    print(f"[serve] V={snap.num_words} K={snap.num_topics} on "
-          f"http://{args.host}:{args.port}")
 
     class Handler(BaseHTTPRequestHandler):
         def _reply(self, code: int, obj):
-            body = json.dumps(obj).encode()
+            self._reply_raw(code, json.dumps(obj, default=str).encode(),
+                            "application/json")
+
+        def _reply_raw(self, code: int, body: bytes, ctype: str):
             self.send_response(code)
-            self.send_header("Content-Type", "application/json")
+            self.send_header("Content-Type", ctype)
             self.send_header("Content-Length", str(len(body)))
             self.end_headers()
             self.wfile.write(body)
@@ -201,7 +260,14 @@ def run_http(args) -> int:
             if self.path == "/healthz":
                 self._reply(200, {"ok": True, "model_version": model.version})
             elif self.path == "/stats":
-                self._reply(200, engine.stats())
+                self._reply(200, enriched_stats(model, engine))
+            elif self.path == "/metrics":
+                # Prometheus text exposition format 0.0.4
+                self._reply_raw(
+                    200, engine.obs.registry.render_prometheus().encode(),
+                    "text/plain; version=0.0.4; charset=utf-8")
+            elif self.path == "/trace":
+                self._reply(200, engine.obs.tracer.to_chrome())
             else:
                 self._reply(404, {"error": "unknown path"})
 
@@ -240,12 +306,21 @@ def run_http(args) -> int:
                 return self._reply(200, {"model_version": v})
             return self._reply(404, {"error": "unknown path"})
 
-    httpd = ThreadingHTTPServer((args.host, args.port), Handler)
+    return ThreadingHTTPServer((args.host, args.port), Handler)
+
+
+def run_http(args) -> int:
+    snap = load_model(args)
+    model, engine = make_engine(args, snap)
+    httpd = make_http_server(args, model, engine)
+    print(f"[serve] V={snap.num_words} K={snap.num_topics} on "
+          f"http://{args.host}:{httpd.server_address[1]}")
     try:
         httpd.serve_forever()
     except KeyboardInterrupt:
         pass
     finally:
+        _dump_obs(args, model, engine)
         engine.stop()
         httpd.server_close()
     return 0

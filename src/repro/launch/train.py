@@ -40,6 +40,12 @@ def main():
     ap.add_argument("--uci", default=None)
     ap.add_argument("--ckpt-dir", default="ckpts")
     ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write one JSONL metrics row per training "
+                         "iteration (tokens/sec, LL, sparse_frac, ...)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="export host phase spans (compile/sample/eval) as "
+                         "Chrome trace JSON, viewable in Perfetto")
     ap.add_argument("--host-devices", type=int, default=0,
                     help="force N host devices (CPU simulation)")
     ap.add_argument("--distributed", action="store_true",
@@ -97,10 +103,17 @@ def run_lda(args):
         # eval cadence must hit every --ckpt-every multiple (the callback
         # only fires on eval iterations)
         import math
+        from repro.obs import Observability
         ev = math.gcd(10, max(1, args.ckpt_every))
+        obs = Observability.default(trace=bool(args.trace_out))
         res = trainer.train(corpus, cfg, args.iters, eval_every=ev,
-                            shard=shard, callback=report)
+                            shard=shard, callback=report, obs=obs,
+                            metrics_out=args.metrics_out)
         mgr.wait()
+        if args.trace_out:
+            print(f"[obs] trace -> {obs.tracer.export(args.trace_out)}")
+        if args.metrics_out:
+            print(f"[obs] per-iteration metrics -> {args.metrics_out}")
         tps = sorted(res.tokens_per_sec)[len(res.tokens_per_sec) // 2]
         print(f"[done] compile {res.compile_sec:.1f}s  "
               f"median {tps / 1e6:.3f}M tok/s")
@@ -126,19 +139,43 @@ def run_lda(args):
     else:
         it0, state = 0, dl.init()
 
-    for it in range(it0, args.iters):
-        t0 = time.perf_counter()
-        state, stats = dl.step(state)
-        jax.block_until_ready(state.z)
-        dt = time.perf_counter() - t0
-        if (it + 1) % 10 == 0:
-            print(f"iter {it + 1:5d}  {corpus.num_tokens / dt / 1e6:7.2f}M tok/s  "
-                  f"LL/token {dl.log_likelihood(state):.4f}  "
-                  f"sparse {float(stats.sparse_frac):.2f}  "
-                  f"S/(S+Q) {float(stats.mean_s_over_sq):.2f}")
-        if (it + 1) % args.ckpt_every == 0:
-            dl.save_checkpoint(mgr, state, {"fingerprint": fp})
+    # same telemetry surface as the single-host driver: a JSONL row per
+    # iteration + host phase spans (the in-step plan/sample/phi_delta/sync
+    # split comes from jax.named_scope inside lda_iteration and shows up in
+    # device profiles, not host spans)
+    from repro.obs import JsonlSink, NULL_SINK, Observability
+    obs = Observability.default(trace=bool(args.trace_out))
+    sink = JsonlSink(args.metrics_out) if args.metrics_out else NULL_SINK
+    try:
+        for it in range(it0, args.iters):
+            t0 = time.perf_counter()
+            with obs.tracer.span("sample", iteration=it):
+                state, stats = dl.step(state)
+                jax.block_until_ready(state.z)
+            dt = time.perf_counter() - t0
+            ll = None
+            if (it + 1) % 10 == 0:
+                with obs.tracer.span("eval", iteration=it):
+                    ll = float(dl.log_likelihood(state))
+                print(f"iter {it + 1:5d}  {corpus.num_tokens / dt / 1e6:7.2f}M tok/s  "
+                      f"LL/token {ll:.4f}  "
+                      f"sparse {float(stats.sparse_frac):.2f}  "
+                      f"S/(S+Q) {float(stats.mean_s_over_sq):.2f}")
+            sink.write(dict(iteration=it, seconds=dt,
+                            tokens=corpus.num_tokens,
+                            tokens_per_sec=corpus.num_tokens / dt,
+                            sparse_frac=float(stats.sparse_frac),
+                            mean_s_over_sq=float(stats.mean_s_over_sq),
+                            ll_per_token=ll))
+            if (it + 1) % args.ckpt_every == 0:
+                dl.save_checkpoint(mgr, state, {"fingerprint": fp})
+    finally:
+        sink.close()
     mgr.wait()
+    if args.trace_out:
+        print(f"[obs] trace -> {obs.tracer.export(args.trace_out)}")
+    if args.metrics_out:
+        print(f"[obs] per-iteration metrics -> {args.metrics_out}")
 
 
 def run_lm(args):

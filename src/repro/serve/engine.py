@@ -23,14 +23,22 @@ For sharded snapshots the worker also resolves the comm strategy
 host-side batch, and meters the measured inter-shard traffic in
 ``stats()['comm_bytes_moved']``.
 
+Telemetry rides ``repro.obs``: every counter/histogram lives in the
+engine's ``Observability`` registry (exposed as Prometheus text via
+``GET /metrics`` in ``launch/serve_lda``), and the worker's hot path is
+phase-span traced — ``collect`` (incl. queue wait) -> ``pack`` -> ``h2d``
+-> ``route`` -> ``sweep`` -> ``assemble`` -> ``callback`` — exportable as
+Chrome trace JSON.  Failed requests carry a *reason*-labelled error counter
+(shutdown vs oov_hotswap vs exception), surfaced per reason in ``stats()``.
+
 Latency accounting is end-to-end per request (submit -> result ready);
-``stats()`` reports p50/p99 and docs/sec over the recorded window, with the
-throughput span anchored at the *first request submit* so single-batch runs
-report an honest, non-zero rate.
+``stats()`` reports p50/p99 over the bounded recording window and two
+throughput rates: the lifetime ``docs_per_sec`` (span anchored at the
+*first request submit*) and ``docs_per_sec_window``, a sliding-window rate
+that idle gaps between traffic bursts cannot drag toward zero.
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 import queue
 import threading
@@ -41,6 +49,7 @@ from typing import Any, Sequence
 import numpy as np
 import jax
 
+from repro.obs import LATENCY_BUCKETS_MS, SIZE_BUCKETS, Observability
 from repro.serve.infer import (InferConfig, _host_batch_from_buffer,
                                fold_in_request, pack_request_buffer,
                                resolve_comm, routing_plan, serve_cache_size)
@@ -55,6 +64,7 @@ class EngineConfig:
     max_delay_ms: float = 3.0
     length_buckets: tuple[int, ...] = (32, 64, 128, 256)
     infer: InferConfig = InferConfig()
+    rate_window_s: float = 10.0   # docs_per_sec_window sliding window
 
     def batch_buckets(self) -> tuple[int, ...]:
         b, out = 1, []
@@ -87,20 +97,47 @@ class LDAServeEngine:
     """Threaded micro-batching front end over ``fold_in``."""
 
     def __init__(self, model: HotSwapModel, cfg: EngineConfig | None = None,
-                 seed: int = 0):
+                 seed: int = 0, obs: Observability | None = None):
         self.model = model
         self.cfg = cfg or EngineConfig()
+        self.obs = obs if obs is not None else Observability.default()
         self._queue: queue.Queue = queue.Queue()
         self._lock = threading.Lock()
         self._closed = False
-        # bounded windows: stats stay O(window), not O(lifetime)
-        self._latencies_ms: collections.deque = collections.deque(maxlen=4096)
-        self._batch_sizes: collections.deque = collections.deque(maxlen=4096)
-        self._docs_done = 0
-        self._batches_done = 0
-        self._errors = 0
-        self._h2d_transfers = 0
-        self._comm_bytes = 0   # measured inter-shard bytes (sharded phi only)
+        reg = self.obs.registry
+        self._m_requests = reg.counter(
+            "repro_serve_requests_total", "documents served")
+        self._m_errors = reg.counter(
+            "repro_serve_errors_total",
+            "failed requests by reason (shutdown|oov_hotswap|exception)",
+            labelnames=("reason",))
+        self._m_truncated = reg.counter(
+            "repro_serve_truncated_total",
+            "requests cut to the largest length bucket")
+        self._m_batches = reg.counter(
+            "repro_serve_batches_total", "batches executed")
+        self._m_h2d = reg.counter(
+            "repro_serve_h2d_transfers_total",
+            "host->device transfers (one packed buffer per batch)")
+        self._m_comm = reg.counter(
+            "repro_serve_comm_bytes_moved_total",
+            "measured inter-shard bytes (sharded phi only)")
+        self._m_latency = reg.histogram(
+            "repro_serve_request_latency_ms",
+            "end-to-end request latency, submit -> result ready",
+            buckets=LATENCY_BUCKETS_MS)
+        self._m_queue_wait = reg.histogram(
+            "repro_serve_queue_wait_ms",
+            "submit -> batch collection wait", buckets=LATENCY_BUCKETS_MS)
+        self._m_batch_size = reg.histogram(
+            "repro_serve_batch_size", "documents per executed batch",
+            buckets=SIZE_BUCKETS)
+        reg.gauge("repro_serve_queue_depth", "requests waiting for a batch",
+                  fn=self._queue.qsize)
+        reg.gauge("repro_serve_jit_cache_size",
+                  "compiled fold-in variants (bucketing invariant)",
+                  fn=serve_cache_size)
+        self._rate = self.obs.window_rate(self.cfg.rate_window_s)
         self._t_first: float | None = None
         self._t_last: float | None = None
         self._rng = np.random.default_rng(seed)
@@ -123,6 +160,8 @@ class LDAServeEngine:
         if toks.size and (toks.min() < 0 or toks.max() >= v):
             raise ValueError(f"word ids must be in [0, {v})")
         req = _Request(toks, truncated=full.size > L_max)
+        if req.truncated:
+            self._m_truncated.inc()
         with self._lock:
             if self._closed:
                 raise RuntimeError("engine stopped")
@@ -178,31 +217,36 @@ class LDAServeEngine:
             if r is not _SENTINEL:
                 pending.append(r)
         if pending:
-            self._fail(pending, msg)
+            self._fail(pending, msg, reason="shutdown")
 
     # -- metrics ------------------------------------------------------------
-    def stats(self) -> dict[str, float]:
+    def stats(self) -> dict[str, Any]:
         """Counters over the engine lifetime; percentiles over the last
-        <=4096 requests (the bounded recording window)."""
+        <=4096 requests (the bounded recording window).
+
+        ``docs_per_sec`` is the lifetime rate (first submit -> last done);
+        ``docs_per_sec_window`` slides over ``cfg.rate_window_s`` so idle
+        gaps between traffic bursts don't drag it toward zero.
+        """
         with self._lock:
-            lat = np.asarray(self._latencies_ms, np.float64)
-            n = self._docs_done
-            errors = self._errors
             span = ((self._t_last or 0.0) - (self._t_first or 0.0))
-            mean_b = float(np.mean(self._batch_sizes)) if self._batch_sizes else 0.0
-            batches = self._batches_done
-            h2d = self._h2d_transfers
-            comm_bytes = self._comm_bytes
+        n = self._m_requests.value
         return dict(
-            requests=float(n),
-            errors=float(errors),
-            batches=float(batches),
-            mean_batch=mean_b,
-            h2d_transfers=float(h2d),
-            comm_bytes_moved=float(comm_bytes),
-            p50_ms=float(np.percentile(lat, 50)) if lat.size else 0.0,
-            p99_ms=float(np.percentile(lat, 99)) if lat.size else 0.0,
+            requests=n,
+            errors=self._m_errors.value,
+            errors_by_reason=self._m_errors.per_label(),
+            truncated=self._m_truncated.value,
+            batches=self._m_batches.value,
+            mean_batch=self._m_batch_size.mean,
+            h2d_transfers=self._m_h2d.value,
+            comm_bytes_moved=self._m_comm.value,
+            p50_ms=self._m_latency.percentile(50),
+            p99_ms=self._m_latency.percentile(99),
+            queue_wait_p50_ms=self._m_queue_wait.percentile(50),
             docs_per_sec=(n / span) if span > 0 else 0.0,
+            docs_per_sec_window=self._rate.rate(),
+            queue_depth=float(self._queue.qsize()),
+            jit_cache_size=float(serve_cache_size()),
         )
 
     def jit_cache_size(self) -> int:
@@ -231,20 +275,25 @@ class LDAServeEngine:
             batch.append(nxt)
         return batch
 
-    def _fail(self, reqs: list[_Request], msg: str):
-        with self._lock:
-            self._errors += len(reqs)
+    def _fail(self, reqs: list[_Request], msg: str,
+              reason: str = "exception"):
+        self._m_errors.labels(reason=reason).inc(len(reqs))
         for r in reqs:
             r.result = dict(error=msg)
             r.event.set()
 
     def _run(self):
+        tracer = self.obs.tracer
+        tracer.name_thread("engine-worker")
         while True:
+            t0 = time.perf_counter()
             batch = self._collect()
             if batch is None:
                 # shutdown: fail anything still queued so callers unblock
                 self._drain_pending("engine stopped")
                 return
+            tracer.complete("collect", t0, time.perf_counter(),
+                            n=len(batch))
             # A failed batch must never kill the worker: pending requests
             # would hang and the queue would silently stop draining.
             try:
@@ -252,13 +301,12 @@ class LDAServeEngine:
             except Exception as e:  # noqa: BLE001 — report to callers, keep serving
                 traceback.print_exc()
                 self._fail([r for r in batch if not r.event.is_set()],
-                           f"{type(e).__name__}: {e}")
+                           f"{type(e).__name__}: {e}", reason="exception")
 
     def _to_device(self, packed: np.ndarray, snap):
         """The batch's single H2D transfer (replicated over the snapshot's
         mesh when phi is sharded)."""
-        with self._lock:
-            self._h2d_transfers += 1
+        self._m_h2d.inc()
         if isinstance(snap, ShardedModelSnapshot):
             from jax.sharding import NamedSharding, PartitionSpec
             return jax.device_put(
@@ -267,6 +315,10 @@ class LDAServeEngine:
 
     def _serve_batch(self, batch: list[_Request]):
         cfg = self.cfg
+        tracer = self.obs.tracer
+        t_collected = time.perf_counter()
+        for r in batch:
+            self._m_queue_wait.observe((t_collected - r.t_submit) * 1e3)
         version, snap = self.model.acquire()
         # Re-validate against the snapshot this batch will actually be
         # served with: a hot-swap between submit() and here may have shrunk
@@ -279,7 +331,8 @@ class LDAServeEngine:
                 ok.append(r)
         if bad:
             self._fail(bad, f"word ids must be in [0, {snap.num_words}) "
-                            "(vocabulary changed by hot-swap)")
+                            "(vocabulary changed by hot-swap)",
+                       reason="oov_hotswap")
         if not ok:
             return
         batch = ok
@@ -287,7 +340,8 @@ class LDAServeEngine:
         B = _bucket(len(batch), cfg.batch_buckets())
         L = _bucket(max(len(r.tokens) for r in batch), cfg.length_buckets)
         seed = int(self._rng.integers(2**31))
-        packed = pack_request_buffer([r.tokens for r in batch], B, L, seed)
+        with tracer.span("pack", B=B, L=L, n=len(batch)):
+            packed = pack_request_buffer([r.tokens for r in batch], B, L, seed)
 
         # Sharded phi: plan the all2all routing host-side from the packed
         # batch (no extra D2H) and meter the strategy's inter-shard bytes.
@@ -295,26 +349,32 @@ class LDAServeEngine:
         if isinstance(snap, ShardedModelSnapshot):
             from repro.distributed.partition import psum_gather_bytes
 
-            if resolve_comm(snap, cfg.infer) == "all2all":
-                plan = routing_plan(snap, *_host_batch_from_buffer(packed))
-                capacity, moved = plan.capacity, plan.a2a_bytes
-            else:
-                moved = psum_gather_bytes(B, L, snap.num_topics,
-                                          snap.num_shards)
-            with self._lock:
-                self._comm_bytes += moved
+            with tracer.span("route"):
+                if resolve_comm(snap, cfg.infer) == "all2all":
+                    plan = routing_plan(snap, *_host_batch_from_buffer(packed))
+                    capacity, moved = plan.capacity, plan.a2a_bytes
+                else:
+                    moved = psum_gather_bytes(B, L, snap.num_topics,
+                                              snap.num_shards)
+            self._m_comm.inc(moved)
 
-        buf = self._to_device(packed, snap)        # ONE H2D for the batch
-        res = fold_in_request(snap, buf, cfg.infer, capacity=capacity)
-        theta = np.asarray(res.theta)
-        tt = np.asarray(res.top_topics)
-        tw = np.asarray(res.top_weights)
+        with tracer.span("h2d", bytes=packed.nbytes):
+            buf = self._to_device(packed, snap)    # ONE H2D for the batch
+        with tracer.span("sweep", B=B, L=L, impl=cfg.infer.impl):
+            res = fold_in_request(snap, buf, cfg.infer, capacity=capacity)
+        with tracer.span("assemble"):
+            # np.asarray blocks on the device computation dispatched above
+            theta = np.asarray(res.theta)
+            tt = np.asarray(res.top_topics)
+            tw = np.asarray(res.top_weights)
 
         now = time.perf_counter()
-        with self._lock:
-            self._t_last = now
-            self._batch_sizes.append(len(batch))
-            self._batches_done += 1
+        with tracer.span("callback", n=len(batch)):
+            with self._lock:
+                self._t_last = now
+            self._m_batch_size.observe(len(batch))
+            self._m_batches.inc()
+            self._rate.record(len(batch), t=now)
             for i, r in enumerate(batch):
                 r.result = dict(
                     theta=theta[i], top_topics=tt[i], top_weights=tw[i],
@@ -322,7 +382,7 @@ class LDAServeEngine:
                     truncated=r.truncated,
                     latency_ms=(now - r.t_submit) * 1e3,
                 )
-                self._latencies_ms.append(r.result["latency_ms"])
-                self._docs_done += 1
-        for r in batch:
-            r.event.set()
+                self._m_latency.observe(r.result["latency_ms"])
+                self._m_requests.inc()
+            for r in batch:
+                r.event.set()

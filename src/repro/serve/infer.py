@@ -179,10 +179,12 @@ def _fold_in_rows(
     z0 = jax.random.randint(k_init, (B, L), 0, K, jnp.int32)
     carry = (z0, _theta_counts(z0, mask, K))
     keys = jax.random.split(k_sweeps, burn_in + samples)
-    carry, _ = jax.lax.scan(sweep, carry, keys[:burn_in])
-    _, (thetas, sps, ssqs) = jax.lax.scan(sweep, carry, keys[burn_in:])
-    return _assemble(thetas.sum(0), sps.sum(), ssqs.sum(), alpha, samples,
-                     kk, denom)
+    with jax.named_scope("serve.sweeps"):
+        carry, _ = jax.lax.scan(sweep, carry, keys[:burn_in])
+        _, (thetas, sps, ssqs) = jax.lax.scan(sweep, carry, keys[burn_in:])
+    with jax.named_scope("serve.assemble"):
+        return _assemble(thetas.sum(0), sps.sum(), ssqs.sum(), alpha,
+                         samples, kk, denom)
 
 
 _STATICS = ("num_words_total", "burn_in", "samples", "top_k", "ell_capacity",
@@ -212,8 +214,10 @@ def fold_in(
     ``interpret=None`` resolves by backend: the Pallas kernel compiles on
     TPU and falls back to the interpreter everywhere else.
     """
+    with jax.named_scope("serve.gather"):
+        phi_tok = phi_vk[tokens]
     return _fold_in_rows(
-        phi_vk[tokens], phi_sum, mask, key, alpha, beta,
+        phi_tok, phi_sum, mask, key, alpha, beta,
         num_words_total=num_words_total, burn_in=burn_in, samples=samples,
         top_k=top_k, ell_capacity=ell_capacity, impl=impl,
         interpret=interpret)
@@ -287,10 +291,17 @@ def fold_in_buffer(
     impl: str = "xla",
     interpret: bool | None = None,
 ) -> FoldInResult:
-    """``fold_in`` over a packed request buffer (the engine's batch unit)."""
-    tokens, mask, key = _unpack_request_buffer(buf)
+    """``fold_in`` over a packed request buffer (the engine's batch unit).
+
+    The ``jax.named_scope`` names here (and in the sweep path) are pure HLO
+    metadata — they line device profiles up with the host phase spans the
+    engine records, and cannot change draws."""
+    with jax.named_scope("serve.unpack"):
+        tokens, mask, key = _unpack_request_buffer(buf)
+    with jax.named_scope("serve.gather"):
+        phi_tok = phi_vk[tokens]
     return _fold_in_rows(
-        phi_vk[tokens], phi_sum, mask, key, hyper[0], hyper[1],
+        phi_tok, phi_sum, mask, key, hyper[0], hyper[1],
         num_words_total=num_words_total, burn_in=burn_in, samples=samples,
         top_k=top_k, ell_capacity=ell_capacity, impl=impl,
         interpret=interpret)

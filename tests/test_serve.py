@@ -322,6 +322,99 @@ class TestEngineLifecycleAndAccounting:
             eng.stop()
 
 
+class TestEngineObservability:
+    """ISSUE 6 regressions: the sliding-window rate vs the lifetime-span
+    ``docs_per_sec`` bug, reason-labelled error counters, and the serving
+    metrics showing up in the registry exposition."""
+
+    def _engine(self, snap, rate_window_s=10.0, **kw):
+        return LDAServeEngine(
+            HotSwapModel(snap),
+            EngineConfig(max_batch=4, max_delay_ms=kw.pop("delay_ms", 150.0),
+                         length_buckets=(32, 64),
+                         infer=InferConfig(burn_in=3, samples=2),
+                         rate_window_s=rate_window_s))
+
+    def test_window_rate_survives_idle_gap(self, planted_snapshot):
+        """Pre-fix, the only throughput number was lifetime-span docs/sec:
+        any idle gap between bursts dragged it toward zero even while the
+        engine was serving at full speed.  The windowed rate must reflect
+        the *current* burst, not the lifetime average."""
+        import time
+
+        eng = self._engine(planted_snapshot, rate_window_s=0.5)
+        try:
+            docs, _ = planted_docs(8, 24, seed=21)
+            eng.infer_many(docs)
+            time.sleep(1.2)              # idle gap > window
+            eng.infer_many(docs)
+            s = eng.stats()
+            assert s["docs_per_sec_window"] > 0
+            # lifetime rate is diluted by the 1.2s gap; the window is not
+            assert s["docs_per_sec_window"] > s["docs_per_sec"], s
+        finally:
+            eng.stop()
+
+    def test_shutdown_drain_labels_errors(self, planted_snapshot):
+        from repro.serve.engine import _Request
+
+        eng = self._engine(planted_snapshot)
+        eng.stop()
+        req = _Request(np.arange(8, dtype=np.int32))
+        eng._queue.put(req)
+        eng.stop()                       # drains + fails pending
+        s = eng.stats()
+        assert s["errors"] == 1
+        assert s["errors_by_reason"] == {"shutdown": 1}
+
+    def test_worker_exception_labels_errors(self, planted_snapshot):
+        def boom(batch):
+            raise ValueError("injected fault")
+
+        eng = self._engine(planted_snapshot, delay_ms=20.0)
+        try:
+            eng._serve_batch = boom
+            with pytest.raises(RuntimeError, match="injected fault"):
+                eng.infer(np.arange(8, dtype=np.int32))
+            s = eng.stats()
+            assert s["errors_by_reason"] == {"exception": 1}
+        finally:
+            eng.stop()
+
+    def test_registry_exposition_covers_serving(self, planted_snapshot):
+        eng = self._engine(planted_snapshot)
+        try:
+            eng.infer(np.arange(8, dtype=np.int32))
+            text = eng.obs.registry.render_prometheus()
+            for name in ("repro_serve_requests_total",
+                         "repro_serve_request_latency_ms",
+                         "repro_serve_batch_size",
+                         "repro_serve_h2d_transfers_total",
+                         "repro_serve_queue_depth",
+                         "repro_serve_jit_cache_size"):
+                assert f"# TYPE {name} " in text, name
+            assert "repro_serve_requests_total 1" in text
+            s = eng.stats()
+            assert s["queue_depth"] == 0.0
+            assert s["jit_cache_size"] >= 1.0
+            assert s["queue_wait_p50_ms"] >= 0.0
+        finally:
+            eng.stop()
+
+    def test_stats_keeps_legacy_keys(self, planted_snapshot):
+        """The pre-obs stats() surface is a contract (bench scripts, CI)."""
+        eng = self._engine(planted_snapshot)
+        try:
+            eng.infer(np.arange(8, dtype=np.int32))
+            s = eng.stats()
+            for k in ("requests", "errors", "batches", "mean_batch",
+                      "h2d_transfers", "comm_bytes_moved", "p50_ms",
+                      "p99_ms", "docs_per_sec"):
+                assert k in s, k
+        finally:
+            eng.stop()
+
+
 def test_trainer_surfaces_mean_s_over_sq(tiny_corpus):
     """Satellite: the S/(S+Q) diagnostic is real, not the old hardcoded 0."""
     from repro.core import trainer
