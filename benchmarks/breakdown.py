@@ -1,13 +1,10 @@
 """Paper Table 5: execution-time breakdown (sampling / update-theta /
 update-phi) — each phase jitted separately and timed on CPU."""
-import functools
-
 from .common import emit, timeit
 
 
 def run():
     import jax
-    import jax.numpy as jnp
     from repro.core import sampler, trainer, updates
     from repro.core.corpus import ell_capacity, tile_corpus
     from repro.data.synthetic import zipf_corpus

@@ -21,9 +21,7 @@ both sides).  The row asserts the overhead stays under 2%.
 (same envelope, asserted by CI); ``--tiny`` shrinks the corpus to a
 seconds-scale CI config.
 """
-import dataclasses
 import functools
-import time
 
 from .common import emit, timeit, write_bench_json
 

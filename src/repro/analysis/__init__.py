@@ -1,0 +1,36 @@
+"""repro.analysis — project static analysis + runtime sanitizers.
+
+Four checkers gate CI (``python -m repro.analysis``):
+
+- ``prng-discipline`` — AST pass for jax PRNG key misuse (reused keys,
+  discarded split children, raw draws outside the shared helpers).
+- ``kernel-contract`` — executed checks over each Pallas kernel's launch
+  geometry (VMEM budget, index-map bounds over the full grid, output
+  tiling coverage), derived from the same ``grid_layout()`` the kernels
+  launch from.
+- ``lock-discipline`` — race detector for the serving engine's
+  lock-guarded attributes, plus the runtime ``assert_lock_held`` probe.
+- ``jit-cache`` — compile-count budgets for the public jitted entry
+  points across the supported config matrix.
+
+Findings are suppressible via ``analysis-baseline.json`` (empty on a
+clean tree); the JSON report is the ``repro-analysis/v1`` schema CI
+uploads.  Runtime sanitizers (``--sanitize`` on the launch entry points)
+live in ``repro.analysis.runtime``.
+"""
+from .contracts import ContractCase, KernelContract, Operand
+from .report import Finding
+from .runtime import (assert_lock_held, enable_debug_nans,
+                      enable_lock_sanitizer, lock_sanitizer_enabled,
+                      sanitize_guards)
+
+__all__ = [
+    "ContractCase", "KernelContract", "Operand", "Finding",
+    "assert_lock_held", "enable_debug_nans", "enable_lock_sanitizer",
+    "lock_sanitizer_enabled", "sanitize_guards", "main",
+]
+
+
+def main(argv=None) -> int:
+    from .cli import main as _main
+    return _main(argv)

@@ -1,0 +1,116 @@
+"""``python -m repro.analysis`` — run the checkers, gate on the baseline.
+
+Exit codes: 0 = no unsuppressed findings, 1 = unsuppressed findings,
+2 = a checker crashed.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import traceback
+from pathlib import Path
+
+from . import report as report_mod
+
+CHECKS = ("prng-discipline", "kernel-contract", "lock-discipline",
+          "jit-cache")
+
+
+def _checker(name):
+    if name == "prng-discipline":
+        from . import prng
+        return prng.run
+    if name == "kernel-contract":
+        from . import kernel_contract
+        return kernel_contract.run
+    if name == "lock-discipline":
+        from . import locks
+        return locks.run
+    if name == "jit-cache":
+        from . import jit_cache
+        return jit_cache.run
+    raise KeyError(name)
+
+
+def _default_root() -> Path:
+    p = Path.cwd()
+    for cand in (p, *p.parents):
+        if (cand / "src" / "repro").is_dir():
+            return cand
+    return p
+
+
+def build_argparser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Project static-analysis suite: PRNG discipline, Pallas "
+                    "kernel contracts, engine lock discipline, jit-cache "
+                    "budgets.")
+    ap.add_argument("--checks", nargs="+", choices=CHECKS, metavar="CHECK",
+                    help=f"subset of checkers to run (default: all of "
+                         f"{', '.join(CHECKS)})")
+    ap.add_argument("--root", help="repo root (default: nearest ancestor "
+                                   "containing src/repro)")
+    ap.add_argument("--json", dest="json_out", metavar="PATH",
+                    help="write the repro-analysis/v1 report here")
+    ap.add_argument("--baseline", metavar="PATH",
+                    help="suppression file (default: "
+                         "<root>/analysis-baseline.json)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline to suppress every current "
+                         "finding (then exit 0)")
+    ap.add_argument("--list-checks", action="store_true",
+                    help="list checker names and exit")
+    return ap
+
+
+def main(argv=None) -> int:
+    args = build_argparser().parse_args(argv)
+    if args.list_checks:
+        for name in CHECKS:
+            print(name)
+        return 0
+
+    root = Path(args.root).resolve() if args.root else _default_root()
+    src = str(root / "src")
+    if src not in sys.path:
+        sys.path.insert(0, src)
+
+    selected = list(args.checks) if args.checks else list(CHECKS)
+    findings = []
+    for name in selected:
+        try:
+            got = _checker(name)(root)
+        except Exception:
+            traceback.print_exc()
+            print(f"[analysis] checker '{name}' crashed", file=sys.stderr)
+            return 2
+        print(f"[analysis] {name}: {len(got)} finding(s)")
+        findings += got
+
+    baseline_path = (Path(args.baseline) if args.baseline
+                     else root / "analysis-baseline.json")
+    rep = report_mod.build_report(findings, selected, baseline_path)
+
+    if args.update_baseline:
+        report_mod.write_baseline(baseline_path, rep["findings"])
+        print(f"[analysis] baseline updated: {baseline_path} "
+              f"({rep['summary']['total']} suppression(s))")
+        rep = report_mod.build_report(findings, selected, baseline_path)
+
+    if args.json_out:
+        Path(args.json_out).write_text(json.dumps(rep, indent=1) + "\n")
+
+    for r in rep["findings"]:
+        if not r["suppressed"]:
+            print(f"{r['path']}:{r['line']}: {r['code']} [{r['scope']}] "
+                  f"{r['message']}")
+    for fp in rep["stale_suppressions"]:
+        print(f"[analysis] stale suppression (no longer matches): {fp}",
+              file=sys.stderr)
+
+    s = rep["summary"]
+    print(f"[analysis] {s['total']} finding(s): {s['suppressed']} "
+          f"suppressed, {s['unsuppressed']} unsuppressed")
+    return 0 if s["unsuppressed"] == 0 else 1

@@ -1,0 +1,59 @@
+"""Contract types for Pallas kernel launch geometry.
+
+Each kernel package exports a ``contract()`` in its ``contract.py`` built
+from these types.  The contract feeds the ``kernel-contract`` checker, which
+re-derives the launch geometry from the SAME ``grid_layout()`` the kernel's
+``pallas_call`` uses — so the checked BlockSpecs/scratch cannot drift from
+the launched ones.
+
+Dependency note: this module must stay import-light (stdlib only) so
+``kernels/*/contract.py`` can import it without pulling the whole analysis
+package (and its jax-importing checkers) into kernel import time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class Operand:
+    """One pallas_call operand: its full array shape/dtype plus the
+    BlockSpec that carves it.  ``label`` names it in findings."""
+
+    label: str
+    shape: tuple[int, ...]
+    dtype: Any            # numpy-coercible dtype (np/jnp dtype or scalar type)
+    spec: Any             # pl.BlockSpec — .block_shape / .index_map used
+
+
+@dataclasses.dataclass(frozen=True)
+class ContractCase:
+    """One representative launch configuration to enumerate.
+
+    ``scalar_args`` are the scalar-prefetch operands appended to every
+    index_map call (empty for plain grids).  ``coverage`` lists output
+    labels whose visited block set must equal the full tiling of their
+    array.  ``extra_checks`` are zero-arg callables returning a list of
+    violation messages (kernel-specific invariants like the chunk-plan
+    round trip)."""
+
+    name: str
+    grid: tuple[int, ...]
+    inputs: tuple[Operand, ...]
+    outputs: tuple[Operand, ...]
+    scalar_args: tuple[Any, ...] = ()
+    scratch: tuple[Any, ...] = ()        # pltpu.VMEM entries (.shape/.dtype)
+    coverage: tuple[str, ...] = ()
+    extra_checks: tuple[Callable[[], Sequence[str]], ...] = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelContract:
+    """Budget + representative cases for one kernel."""
+
+    kernel: str                  # e.g. "lda_sample"
+    vmem_budget_bytes: int       # declared operand blocks + scratch only;
+                                 # kernel-internal temporaries are the
+                                 # compiler's to place and are not counted
+    cases: tuple[ContractCase, ...]

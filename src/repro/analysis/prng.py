@@ -1,0 +1,464 @@
+"""prng-discipline: AST checker for jax PRNG key misuse under src/repro/.
+
+Rules (fingerprint codes):
+
+- **PRNG001** — a key that is directly consumed by a ``jax.random`` draw
+  (uniform/randint/normal/...) is ALSO used anywhere else in the same
+  scope: consumed again, split/folded, or passed to another callable (in
+  any order).  Reusing a consumed key correlates draws; consuming a key
+  after deriving children from it correlates the parent draw with every
+  child.  Pure derivation chains (``fold_in`` per step, ``split`` then
+  pass) and pure pass-through are legitimate and never flagged.
+- **PRNG002** — part of a ``split()`` result is discarded: an ``_``
+  unpacking target, or ``split(key, n)[i]`` taking one child and dropping
+  the rest.  Discarded entropy is almost always an API misuse (use
+  ``fold_in`` to derive exactly one child).
+- **PRNG003** — a raw consuming draw inside the sampling modules (core
+  samplers, kernels, serve/infer) outside the shared draw helpers.  The
+  xla/pallas/ref bit-identity contract requires every sampling draw to be
+  shaped by exactly one routine; raw draws fork that contract.
+- **PRNG004** — the same key identity split twice (children collide).
+
+The analysis is flow-sensitive enough for this codebase: If branches fork
+the state and merge by per-key max; loop bodies are walked twice so a
+consume in iteration *i* is seen by iteration *i+1*; an assignment rebinds
+its target AFTER the RHS events fire; nested def/lambda are separate
+scopes.  Findings are deduped on (code, path, line).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from pathlib import Path
+
+from .report import Finding
+
+CHECKER = "prng-discipline"
+
+# jax.random callables that CONSUME the key they are passed.
+CONSUMING = frozenset({
+    "uniform", "normal", "randint", "bernoulli", "categorical", "gumbel",
+    "laplace", "exponential", "beta", "gamma", "poisson", "dirichlet",
+    "truncated_normal", "permutation", "choice", "bits", "orthogonal",
+    "rademacher", "ball", "cauchy", "logistic", "maxwell",
+    "multivariate_normal", "t", "loggamma", "chisquare", "rayleigh",
+    "wald", "geometric", "triangular", "binomial",
+})
+# jax.random callables that DERIVE fresh keys without consuming.
+DERIVING = frozenset({"split", "fold_in", "clone"})
+# Key constructors / converters: neutral, not key uses.
+NEUTRAL = frozenset({"key", "PRNGKey", "key_data", "wrap_key_data",
+                     "key_impl"})
+
+# PRNG003 scope: modules whose consuming draws must go through the shared
+# helpers below (path prefixes / exact repo-relative posix paths).
+SAMPLING_PATHS = (
+    "src/repro/core/sampler.py",
+    "src/repro/core/dense_sampler.py",
+    "src/repro/serve/infer.py",
+    "src/repro/kernels/",
+)
+# The shared draw routines: the only functions allowed to hold raw draws
+# in sampling code.
+DRAW_HELPERS = frozenset({
+    "draw_sweep_uniforms", "tile_uniforms", "tile_uniforms_dense",
+    "draw_fold_in_randoms", "sweep_uniforms", "init_assignments",
+})
+
+
+@dataclasses.dataclass
+class _Rec:
+    """Per-key-identity event counters within one scope."""
+    consumed: int = 0
+    consume_line: int = 0
+    derived: int = 0
+    splits: int = 0
+    passed: int = 0
+
+    def copy(self):
+        return dataclasses.replace(self)
+
+
+class _State(dict):
+    """identity -> _Rec, copy-forkable for branches."""
+
+    def fork(self):
+        s = _State()
+        for k, v in self.items():
+            s[k] = v.copy()
+        return s
+
+    def merge_max(self, *branches):
+        for b in branches:
+            for k, v in b.items():
+                mine = self.get(k)
+                if mine is None:
+                    self[k] = v.copy()
+                    continue
+                if v.consumed > mine.consumed:
+                    mine.consumed, mine.consume_line = (v.consumed,
+                                                       v.consume_line)
+                mine.derived = max(mine.derived, v.derived)
+                mine.splits = max(mine.splits, v.splits)
+                mine.passed = max(mine.passed, v.passed)
+
+    def rec(self, ident) -> _Rec:
+        r = self.get(ident)
+        if r is None:
+            r = self[ident] = _Rec()
+        return r
+
+
+def _identity(node):
+    """Trackable key identities: names, self.x, x[const]."""
+    if isinstance(node, ast.Name):
+        return ("var", node.id)
+    if isinstance(node, ast.Attribute) and isinstance(node.value, ast.Name):
+        return ("attr", node.value.id, node.attr)
+    if (isinstance(node, ast.Subscript) and isinstance(node.value, ast.Name)
+            and isinstance(node.slice, ast.Constant)):
+        return ("item", node.value.id, repr(node.slice.value))
+    return None
+
+
+def _pretty(ident) -> str:
+    if ident[0] == "var":
+        return ident[1]
+    if ident[0] == "attr":
+        return f"{ident[1]}.{ident[2]}"
+    return f"{ident[1]}[{ident[2]}]"
+
+
+class _Module:
+    """Per-module context: jax.random alias resolution + finding sink."""
+
+    def __init__(self, relpath: str):
+        self.relpath = relpath
+        self.in_sampling = any(
+            relpath == p or (p.endswith("/") and relpath.startswith(p))
+            for p in SAMPLING_PATHS)
+        # module names that mean jax.random ("random", "jrandom", ...)
+        self.random_modules = {"random"}
+        # bare names imported from jax.random ("split", ...)
+        self.random_names: set[str] = set()
+        self._findings: list[Finding] = []
+        self._seen: set[tuple] = set()
+
+    def collect_imports(self, tree: ast.Module):
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.name == "jax.random" and a.asname:
+                        self.random_modules.add(a.asname)
+            elif isinstance(node, ast.ImportFrom):
+                if node.module in ("jax.random", "jax._src.random"):
+                    for a in node.names:
+                        self.random_names.add(a.asname or a.name)
+                elif node.module == "jax":
+                    for a in node.names:
+                        if a.name == "random":
+                            self.random_modules.add(a.asname or "random")
+
+    def classify_call(self, call: ast.Call):
+        """-> ("consume"|"derive"|"neutral", fn_name) for jax.random calls,
+        else None."""
+        fn = call.func
+        parts = []
+        while isinstance(fn, ast.Attribute):
+            parts.append(fn.attr)
+            fn = fn.value
+        if isinstance(fn, ast.Name):
+            parts.append(fn.id)
+        else:
+            return None
+        parts.reverse()
+        tail = parts[-1]
+        is_jr = ((len(parts) >= 2 and parts[-2] in self.random_modules)
+                 or (len(parts) == 1 and tail in self.random_names))
+        if not is_jr:
+            return None
+        if tail in CONSUMING:
+            return ("consume", tail)
+        if tail in DERIVING:
+            return ("derive", tail)
+        if tail in NEUTRAL:
+            return ("neutral", tail)
+        return None
+
+    def emit(self, code: str, node, scope: str, message: str):
+        key = (code, node.lineno)
+        if key in self._seen:
+            return
+        self._seen.add(key)
+        self._findings.append(Finding(
+            checker=CHECKER, code=code, path=self.relpath,
+            line=node.lineno, message=message, scope=scope))
+
+
+class _Scope:
+    """Flow-sensitive walk of one function/module body."""
+
+    def __init__(self, mod: _Module, name: str, in_helper: bool):
+        self.mod = mod
+        self.name = name          # dotted scope for fingerprints
+        self.in_helper = in_helper  # inside an allowlisted draw helper?
+
+    # ---- events --------------------------------------------------------
+
+    def _event(self, state: _State, ident, kind: str, fn: str, node):
+        rec = state.rec(ident)
+        who = _pretty(ident)
+        if kind == "consume":
+            if rec.consumed:
+                self.mod.emit(
+                    "PRNG001", node, self.name,
+                    f"key '{who}' consumed by jax.random.{fn} but already "
+                    f"consumed at line {rec.consume_line} — reused keys "
+                    f"produce correlated draws; split/fold_in a fresh key")
+            elif rec.derived or rec.passed:
+                self.mod.emit(
+                    "PRNG001", node, self.name,
+                    f"key '{who}' consumed by jax.random.{fn} after being "
+                    f"{'split/folded' if rec.derived else 'passed on'} — "
+                    f"its stream overlaps the other use; derive a fresh "
+                    f"key instead")
+            rec.consumed += 1
+            rec.consume_line = node.lineno
+            if self.mod.in_sampling and not self.in_helper:
+                self.mod.emit(
+                    "PRNG003", node, self.name,
+                    f"raw jax.random.{fn} draw in sampling code outside the "
+                    f"shared helpers ({', '.join(sorted(DRAW_HELPERS))}) — "
+                    f"raw draws fork the xla/pallas/ref bit-identity "
+                    f"contract")
+        elif kind == "derive":
+            if rec.consumed:
+                self.mod.emit(
+                    "PRNG001", node, self.name,
+                    f"key '{who}' passed to jax.random.{fn} after being "
+                    f"consumed at line {rec.consume_line} — children derived "
+                    f"from a consumed key correlate with that draw")
+            rec.derived += 1
+            if fn == "split":
+                rec.splits += 1
+                if rec.splits > 1:
+                    self.mod.emit(
+                        "PRNG004", node, self.name,
+                        f"key '{who}' split more than once — both splits "
+                        f"yield the SAME children; fold_in distinct "
+                        f"constants or reuse the first split")
+        elif kind == "pass":
+            if rec.consumed:
+                self.mod.emit(
+                    "PRNG001", node, self.name,
+                    f"key '{who}' passed onward after being consumed at "
+                    f"line {rec.consume_line} — the callee would redraw "
+                    f"from a spent stream")
+            rec.passed += 1
+
+    # ---- expressions ---------------------------------------------------
+
+    def _split_subscript(self, node) -> bool:
+        """``split(...)[i]`` anywhere in an expression discards children."""
+        if (isinstance(node, ast.Subscript)
+                and isinstance(node.value, ast.Call)):
+            k = self.mod.classify_call(node.value)
+            if k and k[1] == "split":
+                self.mod.emit(
+                    "PRNG002", node, self.name,
+                    "split(...)[i] keeps one child and discards the rest — "
+                    "use fold_in(key, i)")
+                return True
+        return False
+
+    def _visit_expr(self, node, state: _State):
+        if node is None:
+            return
+        self._split_subscript(node)
+        if isinstance(node, ast.Call):
+            self._visit_call(node, state)
+            return
+        if isinstance(node, ast.Lambda):
+            _Scope(self.mod, f"{self.name}.<lambda>",
+                   self.in_helper)._run_lambda(node)
+            return
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            self._nested_def(node)
+            return
+        for child in ast.iter_child_nodes(node):
+            self._visit_expr(child, state)
+
+    def _visit_call(self, call: ast.Call, state: _State):
+        kind = self.mod.classify_call(call)
+        args = list(call.args)
+        kwargs = [kw.value for kw in call.keywords]
+        if kind and kind[0] in ("consume", "derive"):
+            if args:
+                ident = _identity(args[0])
+                if ident is not None:
+                    self._event(state, ident, kind[0], kind[1], call)
+                else:
+                    # e.g. uniform(fold_in(key, i), ...) — recurse so the
+                    # inner derive still registers.
+                    self._visit_expr(args[0], state)
+            for a in args[1:] + kwargs:
+                self._collect_passes(a, state)
+            return
+        if kind and kind[0] == "neutral":
+            for a in args + kwargs:
+                self._visit_expr(a, state)
+            return
+        # Any other callable: bare identities in its arguments are "passed".
+        self._visit_expr(call.func, state)
+        for a in args + kwargs:
+            self._collect_passes(a, state)
+
+    def _collect_passes(self, node, state: _State):
+        """Within a call-argument subtree: record pass events for bare
+        identities, recurse normally into nested calls/lambdas."""
+        if isinstance(node, (ast.Call, ast.Lambda)):
+            self._visit_expr(node, state)
+            return
+        self._split_subscript(node)
+        ident = _identity(node)
+        if ident is not None and isinstance(getattr(node, "ctx", None),
+                                            ast.Load):
+            if ident in state:   # only identities with a history matter
+                self._event(state, ident, "pass", "", node)
+            else:
+                state.rec(ident).passed += 1
+            return
+        for child in ast.iter_child_nodes(node):
+            self._collect_passes(child, state)
+
+    # ---- statements ----------------------------------------------------
+
+    def _check_split_discard(self, stmt: ast.Assign):
+        v = stmt.value
+        split_call = None
+        if isinstance(v, ast.Call):
+            k = self.mod.classify_call(v)
+            if k and k[1] == "split":
+                split_call = v
+        if split_call is not None:
+            for tgt in stmt.targets:
+                if isinstance(tgt, (ast.Tuple, ast.List)):
+                    for elt in tgt.elts:
+                        if isinstance(elt, ast.Name) and elt.id == "_":
+                            self.mod.emit(
+                                "PRNG002", stmt, self.name,
+                                "split() child discarded into '_' — use "
+                                "fold_in to derive exactly the keys needed")
+        if (isinstance(v, ast.Subscript) and isinstance(v.value, ast.Call)):
+            k = self.mod.classify_call(v.value)
+            if k and k[1] == "split":
+                self.mod.emit(
+                    "PRNG002", stmt, self.name,
+                    "split(...)[i] keeps one child and discards the rest — "
+                    "use fold_in(key, i)")
+
+    def _rebind(self, target, state: _State):
+        ident = _identity(target)
+        if ident is not None:
+            state.pop(ident, None)
+            return
+        if isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self._rebind(elt, state)
+        elif isinstance(target, ast.Starred):
+            self._rebind(target.value, state)
+
+    def _exec(self, stmts, state: _State):
+        for stmt in stmts:
+            self._stmt(stmt, state)
+
+    def _stmt(self, stmt, state: _State):
+        if isinstance(stmt, ast.Assign):
+            self._check_split_discard(stmt)
+            self._visit_expr(stmt.value, state)
+            for t in stmt.targets:
+                self._rebind(t, state)
+        elif isinstance(stmt, ast.AnnAssign):
+            if stmt.value is not None:
+                self._visit_expr(stmt.value, state)
+                self._rebind(stmt.target, state)
+        elif isinstance(stmt, ast.AugAssign):
+            self._visit_expr(stmt.value, state)
+        elif isinstance(stmt, (ast.Expr, ast.Return)):
+            self._visit_expr(stmt.value, state)
+        elif isinstance(stmt, ast.If):
+            self._visit_expr(stmt.test, state)
+            b1 = state.fork()
+            self._exec(stmt.body, b1)
+            b2 = state.fork()
+            self._exec(stmt.orelse, b2)
+            state.merge_max(b1, b2)
+        elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self._visit_expr(stmt.iter, state)
+            # two passes over the body: a consume in iteration i must be
+            # visible to iteration i+1 (per-line dedupe absorbs repeats)
+            self._exec(stmt.body, state)
+            self._exec(stmt.body, state)
+            self._exec(stmt.orelse, state)
+        elif isinstance(stmt, ast.While):
+            self._visit_expr(stmt.test, state)
+            self._exec(stmt.body, state)
+            self._exec(stmt.body, state)
+            self._exec(stmt.orelse, state)
+        elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                self._visit_expr(item.context_expr, state)
+            self._exec(stmt.body, state)
+        elif isinstance(stmt, ast.Try):
+            self._exec(stmt.body, state)
+            for h in stmt.handlers:
+                hb = state.fork()
+                self._exec(h.body, hb)
+                state.merge_max(hb)
+            self._exec(stmt.orelse, state)
+            self._exec(stmt.finalbody, state)
+        elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            self._nested_def(stmt)
+        elif isinstance(stmt, ast.ClassDef):
+            for sub in stmt.body:
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    _Scope(self.mod, f"{self.name}.{stmt.name}.{sub.name}",
+                           sub.name in DRAW_HELPERS)._run_def(sub)
+        # Other statements (Raise, Assert, Delete, ...) carry no key flow
+        # this codebase uses; ignore.
+
+    def _nested_def(self, fn):
+        _Scope(self.mod, f"{self.name}.{fn.name}",
+               self.in_helper or fn.name in DRAW_HELPERS)._run_def(fn)
+
+    def _run_def(self, fn):
+        self._exec(fn.body, _State())
+
+    def _run_lambda(self, lam: ast.Lambda):
+        self._visit_expr(lam.body, _State())
+
+
+def check_source(source: str, relpath: str) -> list[Finding]:
+    tree = ast.parse(source)
+    mod = _Module(relpath)
+    mod.collect_imports(tree)
+    top = _Scope(mod, "<module>", in_helper=False)
+    state = _State()
+    for stmt in tree.body:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            _Scope(mod, stmt.name,
+                   stmt.name in DRAW_HELPERS)._run_def(stmt)
+        elif isinstance(stmt, ast.ClassDef):
+            top._stmt(stmt, state)
+        else:
+            top._stmt(stmt, state)
+    return mod._findings
+
+
+def run(root: Path) -> list[Finding]:
+    findings = []
+    base = Path(root) / "src" / "repro"
+    for path in sorted(base.rglob("*.py")):
+        rel = path.relative_to(root).as_posix()
+        findings += check_source(path.read_text(), rel)
+    return findings

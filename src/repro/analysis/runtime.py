@@ -1,0 +1,60 @@
+"""Runtime sanitizers: lock assertions and debug-mode jax guards.
+
+Kept stdlib-light at import time (jax is imported lazily inside
+``sanitize_guards``/``enable_debug_nans``) so ``serve.engine`` can import
+``assert_lock_held`` without changing its import cost.
+
+The lock sanitizer is a no-op unless enabled (``--sanitize`` on the launch
+entry points, or ``EngineConfig(sanitize=True)``), so production paths pay
+one global-bool check per assertion site.
+"""
+from __future__ import annotations
+
+import contextlib
+
+_LOCK_SANITIZER = False
+
+
+def enable_lock_sanitizer(enabled: bool = True) -> None:
+    global _LOCK_SANITIZER
+    _LOCK_SANITIZER = enabled
+
+
+def lock_sanitizer_enabled() -> bool:
+    return _LOCK_SANITIZER
+
+
+class LockNotHeldError(AssertionError):
+    pass
+
+
+def assert_lock_held(lock) -> None:
+    """Raise LockNotHeldError if ``lock`` is not currently held (by anyone).
+
+    Probe: a non-blocking acquire succeeding means the lock was free — the
+    caller reached a guarded section without holding it.  Works for both
+    Lock and RLock; for RLock held by the CURRENT thread the acquire
+    succeeds too, so this asserts "some thread holds it", which is the
+    property the engine's plain Lock sections need.  No-op when the
+    sanitizer is disabled."""
+    if not _LOCK_SANITIZER:
+        return
+    if lock.acquire(blocking=False):
+        lock.release()
+        raise LockNotHeldError(
+            "guarded section entered without holding its lock")
+
+
+def enable_debug_nans() -> None:
+    import jax
+    jax.config.update("jax_debug_nans", True)
+
+
+def sanitize_guards(enabled: bool):
+    """Context manager for hot-path sections: under ``--sanitize`` every
+    implicit host<->device transfer inside becomes an error
+    (``jax.transfer_guard("disallow")``); otherwise a no-op."""
+    if not enabled:
+        return contextlib.nullcontext()
+    import jax
+    return jax.transfer_guard("disallow")

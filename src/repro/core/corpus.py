@@ -21,7 +21,6 @@ All host-side preprocessing is numpy; the result is a pytree of jnp arrays
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 import numpy as np
 import jax.numpy as jnp
@@ -196,7 +195,6 @@ def tile_shard(
     uid_sorted = uid[order]
 
     # cut into tiles: a tile never mixes words
-    boundaries = [0]
     word_starts = np.flatnonzero(np.diff(words_sorted)) + 1
     starts = np.concatenate([[0], word_starts, [len(words_sorted)]])
     tiles: list[tuple[int, int, int]] = []  # (word, start, stop)

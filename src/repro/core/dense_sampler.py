@@ -18,6 +18,12 @@ import jax.numpy as jnp
 Array = jnp.ndarray
 
 
+def tile_uniforms_dense(key: Array, t: int) -> Array:
+    """One tile's (t,) dense-sweep uniforms from its tile key (the dense
+    baseline's single draw routine — see ``sampler.tile_uniforms``)."""
+    return jax.random.uniform(key, (t,), jnp.float32)
+
+
 def sample_one_tile_dense(
     phi_col: Array,      # (K,) int
     phi_sum: Array,      # (K,) int
@@ -73,8 +79,7 @@ def sample_sweep_dense(
 
     def chunk(carry, inp):
         tw, td, tm, zc, kc = inp
-        unif = jax.vmap(
-            lambda k: jax.random.uniform(k, (t,), jnp.float32))(kc)
+        unif = jax.vmap(functools.partial(tile_uniforms_dense, t=t))(kc)
         phi_cols = phi_vk[tw]
         z_new = jax.vmap(
             functools.partial(

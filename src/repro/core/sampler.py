@@ -100,6 +100,16 @@ _pstar = pstar
 _blocked_search = blocked_search
 
 
+def tile_uniforms(key: Array, t: int) -> Array:
+    """One tile's (t, 2) sweep uniforms from its tile key.
+
+    The ONLY training-sweep draw routine: every path (the XLA scan's
+    chunks, the Pallas kernel's operand tensor) vmaps this over tile keys,
+    so the draws cannot diverge between impls.  The ``prng-discipline``
+    checker enforces that no raw draw bypasses it."""
+    return jax.random.uniform(key, (t, 2), jnp.float32)
+
+
 def draw_sweep_uniforms(key: Array, n: int, t: int) -> Array:
     """The sweep's (n, t, 2) uniforms: one key per *real* tile.
 
@@ -111,8 +121,7 @@ def draw_sweep_uniforms(key: Array, n: int, t: int) -> Array:
     deliberately independent of any padding (split before pad).
     """
     keys = jax.random.split(key, n)
-    return jax.vmap(
-        lambda k: jax.random.uniform(k, (t, 2), jnp.float32))(keys)
+    return jax.vmap(functools.partial(tile_uniforms, t=t))(keys)
 
 
 def sample_one_tile(
@@ -134,7 +143,6 @@ def sample_one_tile(
     Returns (z_new (t,) int, used_sparse (t,) bool, s_over_sq (t,) float32 —
     per-token S/(S+Q) sparse mass share, 0 on padding slots).
     """
-    K = phi_col.shape[0]
     pstar = _pstar(phi_col, phi_sum, beta, num_words_total)     # (K,)
     pstar_total = pstar.sum()
     Q = alpha * pstar_total                                     # C4, per tile
@@ -207,8 +215,7 @@ def sample_sweep(
 
     def chunk(carry, inp):
         tw, td, tm, zc, kc = inp
-        unif = jax.vmap(
-            lambda k: jax.random.uniform(k, (t, 2), jnp.float32))(kc)
+        unif = jax.vmap(functools.partial(tile_uniforms, t=t))(kc)
         phi_cols = phi_vk[tw]                                   # (c, K) gather
         z_new, sp, ssq = jax.vmap(
             functools.partial(

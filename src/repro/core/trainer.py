@@ -43,6 +43,7 @@ import numpy as np
 
 from . import dense_sampler, likelihood, sampler, sync, updates
 from .corpus import Corpus, TiledCorpusShard, ell_capacity, tile_corpus
+from repro.analysis.runtime import sanitize_guards
 
 Array = jnp.ndarray
 
@@ -334,6 +335,7 @@ def train(
     callback: Callable[[int, LDAState, float], None] | None = None,
     obs=None,                      # repro.obs.Observability
     metrics_out: str | None = None,  # per-iteration JSONL sink path
+    sanitize: bool = False,        # transfer-guard the sampling hot path
 ) -> TrainResult:
     """Single-device end-to-end driver.
 
@@ -382,8 +384,12 @@ def train(
         for it in range(num_iterations):
             t0 = time.perf_counter()
             with tracer.span("sample", iteration=it):
-                state, stats = step(state, key)
-                state.z.block_until_ready()
+                # under --sanitize any implicit host<->device transfer in
+                # the sweep dispatch is an error (AOT compile + eval stay
+                # outside the guard: they are allowed to stage host data)
+                with sanitize_guards(sanitize):
+                    state, stats = step(state, key)
+                    state.z.block_until_ready()
             dt = time.perf_counter() - t0
             tps.append(shard.num_tokens / dt)
             st.append((float(stats.sparse_frac), float(stats.ell_overflow),

@@ -26,7 +26,6 @@ launcher's job is replacement, not rebalancing.
 """
 from __future__ import annotations
 
-import dataclasses
 import hashlib
 import json
 import os

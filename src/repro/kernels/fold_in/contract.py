@@ -1,0 +1,47 @@
+"""kernel-contract metadata for the serving fold-in kernel.
+
+One grid step per request doc; the doc's gathered phi rows are the VMEM
+heavyweight — the paper-scale case pins the documented ~1 MB footprint
+(module docstring of ``kernel.py``) under a 2 MB budget.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.analysis.contracts import ContractCase, KernelContract, Operand
+from repro.kernels.fold_in import kernel
+
+VMEM_BUDGET_BYTES = 2 * 1024 * 1024
+
+
+def _case(name: str, *, nB: int, L: int, K: int, n_sweeps: int
+          ) -> ContractCase:
+    grid, in_specs, out_specs = kernel.grid_layout(nB, L, K, n_sweeps)
+    inputs = (
+        Operand("phi_tok", (nB, L, K), jnp.int32, in_specs[0]),
+        Operand("phi_sum", (1, K), jnp.int32, in_specs[1]),
+        Operand("hyper", (1, 2), jnp.float32, in_specs[2]),
+        Operand("uniforms", (nB, n_sweeps, L, 2), jnp.float32, in_specs[3]),
+        Operand("mask", (nB, L), jnp.int32, in_specs[4]),
+        Operand("z0", (nB, L), jnp.int32, in_specs[5]),
+    )
+    outputs = (
+        Operand("theta_sum", (nB, K), jnp.int32, out_specs[0]),
+        Operand("sp", (nB, 1), jnp.int32, out_specs[1]),
+        Operand("ssq", (nB, 1), jnp.float32, out_specs[2]),
+    )
+    return ContractCase(
+        name=name, grid=grid, inputs=inputs, outputs=outputs,
+        coverage=("theta_sum", "sp", "ssq"))
+
+
+def contract() -> KernelContract:
+    return KernelContract(
+        kernel="fold_in",
+        vmem_budget_bytes=VMEM_BUDGET_BYTES,
+        cases=(
+            _case("tiny", nB=4, L=8, K=16, n_sweeps=3),
+            # paper-representative: engine's largest default bucket at
+            # NYTimes K with the default 8+4 sweep schedule
+            _case("paper", nB=32, L=256, K=1024, n_sweeps=12),
+        ))

@@ -160,6 +160,27 @@ def _kernel(
     ssq_ref[0, 0] = ssq
 
 
+def grid_layout(nB: int, L: int, K: int, n_sweeps: int):
+    """Launch geometry: ``(grid, in_specs, out_specs)``.
+
+    Single source of truth — ``fold_in_docs`` launches from this and the
+    ``kernel-contract`` checker (``contract.py``) enumerates it."""
+    in_specs = [
+        pl.BlockSpec((1, L, K), lambda i: (i, 0, 0)),
+        pl.BlockSpec((1, K), lambda i: (0, 0)),
+        pl.BlockSpec((1, 2), lambda i: (0, 0)),
+        pl.BlockSpec((1, n_sweeps, L, 2), lambda i: (i, 0, 0, 0)),
+        pl.BlockSpec((1, L), lambda i: (i, 0)),
+        pl.BlockSpec((1, L), lambda i: (i, 0)),
+    ]
+    out_specs = [
+        pl.BlockSpec((1, K), lambda i: (i, 0)),
+        pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        pl.BlockSpec((1, 1), lambda i: (i, 0)),
+    ]
+    return (nB,), in_specs, out_specs
+
+
 def fold_in_docs(
     phi_tok,       # (B, L, K) int32 — pre-gathered phi rows (one gather, C7)
     phi_sum,       # (K,) int32
@@ -186,22 +207,12 @@ def fold_in_docs(
     kern = functools.partial(
         _kernel, num_words_total=num_words_total, burn_in=burn_in,
         samples=samples, ell_capacity=ell_capacity)
+    grid, in_specs, out_specs = grid_layout(nB, L, K, n_sweeps)
     theta_sum, sp, ssq = pl.pallas_call(
         kern,
-        grid=(nB,),
-        in_specs=[
-            pl.BlockSpec((1, L, K), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1, K), lambda i: (0, 0)),
-            pl.BlockSpec((1, 2), lambda i: (0, 0)),
-            pl.BlockSpec((1, n_sweeps, L, 2), lambda i: (i, 0, 0, 0)),
-            pl.BlockSpec((1, L), lambda i: (i, 0)),
-            pl.BlockSpec((1, L), lambda i: (i, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, K), lambda i: (i, 0)),
-            pl.BlockSpec((1, 1), lambda i: (i, 0)),
-            pl.BlockSpec((1, 1), lambda i: (i, 0)),
-        ],
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
         out_shape=[
             jax.ShapeDtypeStruct((nB, K), jnp.int32),
             jax.ShapeDtypeStruct((nB, 1), jnp.int32),

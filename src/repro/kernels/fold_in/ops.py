@@ -17,10 +17,29 @@ Called from inside ``repro.serve.infer``'s jits; not jitted itself.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
 from . import kernel, ref
+
+
+def init_assignments(key, batch: int, length: int, num_topics: int):
+    """The fold-in's initial (B, L) int32 topic assignments from the init
+    key — the single z0 draw routine shared by every serving path (XLA,
+    Pallas, sharded), enforced by the ``prng-discipline`` checker."""
+    return jax.random.randint(key, (batch, length), 0, num_topics,
+                              jnp.int32)
+
+
+def sweep_uniforms(key, batch: int, length: int):
+    """One sweep's (B, L, 2) uniforms from its sweep key — the single
+    serving-sweep draw routine (see ``init_assignments``).  Always drawn at
+    FULL batch shape: counter-based PRNG values depend on the draw shape,
+    so sharded consumers slice rows out of this rather than drawing a
+    (Bs, L, 2) block."""
+    return jax.random.uniform(key, (batch, length, 2), jnp.float32)
 
 
 def draw_fold_in_randoms(key, batch: int, length: int, num_topics: int,
@@ -31,16 +50,14 @@ def draw_fold_in_randoms(key, batch: int, length: int, num_topics: int,
     sweep -> a (B, L, 2) uniform block), so every consumer of these arrays
     is draw-identical to it.  Drawing at full batch shape and *slicing* is
     how the V-sharded all2all path keeps bit-identity while each shard
-    sweeps only its doc slice: counter-based PRNG values depend on the draw
-    shape, so a (Bs, L) draw would differ from rows of the (B, L) draw.
+    sweeps only its doc slice (see ``sweep_uniforms``).
 
     Returns (z0 (B, L) int32, uniforms (n_sweeps, B, L, 2) float32)."""
     k_init, k_sweeps = jax.random.split(key)
-    z0 = jax.random.randint(k_init, (batch, length), 0, num_topics,
-                            jnp.int32)
+    z0 = init_assignments(k_init, batch, length, num_topics)
     keys = jax.random.split(k_sweeps, n_sweeps)
     uniforms = jax.vmap(
-        lambda k: jax.random.uniform(k, (batch, length, 2), jnp.float32))(keys)
+        functools.partial(sweep_uniforms, batch=batch, length=length))(keys)
     return z0, uniforms
 
 

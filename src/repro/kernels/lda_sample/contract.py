@@ -1,0 +1,82 @@
+"""kernel-contract metadata for the fused training-sweep kernel.
+
+The cases re-derive the launch geometry from ``kernel.grid_layout`` (the
+same call ``lda_sample_tiles`` launches from) over a real host-built chunk
+plan, so the checker exercises the actual scalar-prefetch index maps
+against the actual plan arrays — word-id phi streaming, chunk-doc ELL
+streaming, and the token->slot on-chip gather.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.analysis.contracts import ContractCase, KernelContract, Operand
+from repro.kernels.lda_sample import kernel, ops
+
+# Declared operand blocks + scratch only (the kernel's internal (C, t, P)
+# sparse-side temporary is the compiler's to place).
+VMEM_BUDGET_BYTES = 2 * 1024 * 1024
+
+
+def _case(name: str, *, n: int, t: int, V: int, K: int, D: int, P: int,
+          C: int) -> ContractCase:
+    token_doc = ((2 * (np.arange(n)[:, None]) + np.arange(t)[None, :] % 4)
+                 % D).astype(np.int32)
+    tile_word = (np.arange(n, dtype=np.int32) * 7) % V
+    plan = ops.build_chunk_plan(token_doc, C)
+    chunk_docs = np.asarray(plan.chunk_docs)
+    token_slot = np.asarray(plan.token_slot)
+    n_chunks, dpc = chunk_docs.shape
+    grid, in_specs, out_specs, scratch = kernel.grid_layout(
+        n_chunks, t, K, P, tiles_per_step=C, docs_per_chunk=dpc)
+
+    def plan_round_trip():
+        # the static token->slot map must re-derive token_doc exactly:
+        # chunk_docs[c][token_slot[tile]] == token_doc[tile] for every token
+        msgs = []
+        for c in range(n_chunks):
+            tiles = slice(c * C, (c + 1) * C)
+            got = chunk_docs[c][token_slot[tiles]]
+            if not np.array_equal(got, token_doc[tiles]):
+                bad = int(np.argwhere(got != token_doc[tiles])[0][0])
+                msgs.append(
+                    f"chunk {c}: token->slot map does not round-trip to "
+                    f"token_doc (first bad tile row {bad})")
+        return msgs
+
+    in_shapes = [
+        Operand("phi_row", (V, K), jnp.int32, in_specs[0]),
+        Operand("phi_sum", (1, K), jnp.int32, in_specs[1]),
+        Operand("ell_counts", (D, P), jnp.int32, in_specs[2]),
+        Operand("ell_topics", (D, P), jnp.int32, in_specs[3]),
+        Operand("token_slot", (n, t), jnp.int32, in_specs[4]),
+        Operand("uniforms", (n, t, 2), jnp.float32, in_specs[5]),
+        Operand("mask", (n, t), jnp.int32, in_specs[6]),
+        Operand("z_old", (n, t), jnp.int32, in_specs[7]),
+    ]
+    out_shapes = [
+        Operand("z_new", (n, t), jnp.int32, out_specs[0]),
+        Operand("sparse", (n, t), jnp.int32, out_specs[1]),
+        Operand("ssq", (n, t), jnp.float32, out_specs[2]),
+    ]
+    return ContractCase(
+        name=name, grid=grid,
+        inputs=tuple(in_shapes), outputs=tuple(out_shapes),
+        scalar_args=(tile_word, chunk_docs),
+        scratch=tuple(scratch),
+        coverage=("z_new", "sparse", "ssq"),
+        extra_checks=(plan_round_trip,))
+
+
+def contract() -> KernelContract:
+    return KernelContract(
+        kernel="lda_sample",
+        vmem_budget_bytes=VMEM_BUDGET_BYTES,
+        cases=(
+            _case("tiny", n=8, t=16, V=12, K=32, D=6, P=4, C=4),
+            # paper-representative shapes: NYTimes-bucket K with the default
+            # chunking (scratch (C, K) int32 + two (dpc, P) ELL tables)
+            _case("paper", n=128, t=256, V=512, K=1024, D=2048, P=128,
+                  C=64),
+        ))

@@ -46,7 +46,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.sampler import SEARCH_BLOCK, _pick_block, pick_search_block
+from repro.core.sampler import pick_search_block
 
 
 def _kernel(
@@ -150,6 +150,47 @@ def _kernel(
             mask, Sm / jnp.maximum(Sm + Q[:, None], 1e-30), 0.0)
 
 
+def grid_layout(n_chunks: int, t: int, K: int, P: int, *,
+                tiles_per_step: int, docs_per_chunk: int):
+    """Launch geometry: ``(grid, in_specs, out_specs, scratch_shapes)``.
+
+    Single source of truth — ``lda_sample_tiles`` launches from this and the
+    ``kernel-contract`` checker (``contract.py``) enumerates it, so the
+    checked BlockSpecs can never drift from the launched ones.
+    """
+    C, dpc = tiles_per_step, docs_per_chunk
+    S = max(C, dpc)
+    in_specs = [
+        # one phi row per assembly step, picked by the tile's word id
+        pl.BlockSpec(
+            (1, K),
+            lambda c, s, tw, cd: (tw[c * C + jnp.minimum(s, C - 1)], 0)),
+        pl.BlockSpec((1, K), lambda c, s, tw, cd: (0, 0)),   # phi_sum
+        # one ELL row per assembly step, picked by the chunk's doc list
+        pl.BlockSpec(
+            (1, P),
+            lambda c, s, tw, cd: (cd[c, jnp.minimum(s, dpc - 1)], 0)),
+        pl.BlockSpec(
+            (1, P),
+            lambda c, s, tw, cd: (cd[c, jnp.minimum(s, dpc - 1)], 0)),
+        pl.BlockSpec((C, t), lambda c, s, tw, cd: (c, 0)),
+        pl.BlockSpec((C, t, 2), lambda c, s, tw, cd: (c, 0, 0)),
+        pl.BlockSpec((C, t), lambda c, s, tw, cd: (c, 0)),
+        pl.BlockSpec((C, t), lambda c, s, tw, cd: (c, 0)),
+    ]
+    out_specs = [
+        pl.BlockSpec((C, t), lambda c, s, tw, cd: (c, 0)),
+        pl.BlockSpec((C, t), lambda c, s, tw, cd: (c, 0)),
+        pl.BlockSpec((C, t), lambda c, s, tw, cd: (c, 0)),
+    ]
+    scratch_shapes = [
+        pltpu.VMEM((C, K), jnp.int32),
+        pltpu.VMEM((dpc, P), jnp.int32),
+        pltpu.VMEM((dpc, P), jnp.int32),
+    ]
+    return (n_chunks, S), in_specs, out_specs, scratch_shapes
+
+
 def lda_sample_tiles(
     tile_word,     # (n,) int32 — n a multiple of tiles_per_step
     chunk_docs,    # (n_chunks, dpc) int32 — distinct doc ids per chunk
@@ -180,39 +221,15 @@ def lda_sample_tiles(
     assert n % C == 0, (n, C)
     n_chunks, dpc = chunk_docs.shape
     assert n_chunks * C == n, (n_chunks, C, n)
-    S = max(C, dpc)
 
+    grid, in_specs, out_specs, scratch_shapes = grid_layout(
+        n_chunks, t, K, P, tiles_per_step=C, docs_per_chunk=dpc)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(n_chunks, S),
-        in_specs=[
-            # one phi row per assembly step, picked by the tile's word id
-            pl.BlockSpec(
-                (1, K),
-                lambda c, s, tw, cd: (tw[c * C + jnp.minimum(s, C - 1)], 0)),
-            pl.BlockSpec((1, K), lambda c, s, tw, cd: (0, 0)),   # phi_sum
-            # one ELL row per assembly step, picked by the chunk's doc list
-            pl.BlockSpec(
-                (1, P),
-                lambda c, s, tw, cd: (cd[c, jnp.minimum(s, dpc - 1)], 0)),
-            pl.BlockSpec(
-                (1, P),
-                lambda c, s, tw, cd: (cd[c, jnp.minimum(s, dpc - 1)], 0)),
-            pl.BlockSpec((C, t), lambda c, s, tw, cd: (c, 0)),
-            pl.BlockSpec((C, t, 2), lambda c, s, tw, cd: (c, 0, 0)),
-            pl.BlockSpec((C, t), lambda c, s, tw, cd: (c, 0)),
-            pl.BlockSpec((C, t), lambda c, s, tw, cd: (c, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((C, t), lambda c, s, tw, cd: (c, 0)),
-            pl.BlockSpec((C, t), lambda c, s, tw, cd: (c, 0)),
-            pl.BlockSpec((C, t), lambda c, s, tw, cd: (c, 0)),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((C, K), jnp.int32),
-            pltpu.VMEM((dpc, P), jnp.int32),
-            pltpu.VMEM((dpc, P), jnp.int32),
-        ],
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=scratch_shapes,
     )
     kern = functools.partial(
         _kernel, tiles_per_step=C, docs_per_chunk=dpc,

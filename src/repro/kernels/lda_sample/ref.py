@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from .kernel import SEARCH_BLOCK, _pick_block
+from repro.core.sampler import SEARCH_BLOCK, _pick_block
 
 
 def lda_sample_tiles_ref(

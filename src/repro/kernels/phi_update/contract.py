@@ -1,0 +1,64 @@
+"""kernel-contract metadata for the phi count-update kernel.
+
+The output spec REVISITS blocks (grid walks word-sorted tiles, each landing
+in its word's (1, K) row), so coverage here asserts the word-boundary
+discipline: every phi row is visited, and the ``tile_first`` invariant
+(exactly one first-visit per contiguous word run) holds — that invariant is
+what makes the ``@pl.when(first == 1)`` zero-init produce exact counts.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.analysis.contracts import ContractCase, KernelContract, Operand
+from repro.kernels.phi_update import kernel
+
+VMEM_BUDGET_BYTES = 64 * 1024
+
+
+def _word_sorted_meta(n: int, V: int) -> np.ndarray:
+    """(n, 2) [tile_word, tile_first] with word-sorted tiles covering every
+    word (the trainer's host-side layout)."""
+    tile_word = np.sort((np.arange(n, dtype=np.int32) * V) // n)
+    tile_first = np.r_[1, (np.diff(tile_word) != 0).astype(np.int32)]
+    return np.stack([tile_word, tile_first], axis=1).astype(np.int32)
+
+
+def _case(name: str, *, n: int, t: int, V: int, K: int, delta: bool
+          ) -> ContractCase:
+    meta = _word_sorted_meta(n, V)
+    grid, in_specs, out_spec = kernel.grid_layout(n, t, K, delta=delta)
+    names = ("z_new", "z_old", "mask") if delta else ("z", "mask")
+    inputs = tuple(Operand(nm, (n, t), jnp.int32, spec)
+                   for nm, spec in zip(names, in_specs))
+    outputs = (Operand("phi_delta", (V, K), jnp.int32, out_spec),)
+
+    def first_visit_invariant():
+        msgs = []
+        w, f = meta[:, 0], meta[:, 1]
+        if not np.array_equal(w, np.sort(w)):
+            msgs.append("tile_word not word-sorted — block revisiting "
+                        "would interleave rows mid-accumulation")
+        expect_first = np.r_[1, (np.diff(w) != 0).astype(np.int32)]
+        if not np.array_equal(f, expect_first):
+            msgs.append("tile_first != first-tile-of-each-word-run — the "
+                        "first-visit zero-init would drop or double counts")
+        return msgs
+
+    return ContractCase(
+        name=name, grid=grid, inputs=inputs, outputs=outputs,
+        scalar_args=(meta,), coverage=("phi_delta",),
+        extra_checks=(first_visit_invariant,))
+
+
+def contract() -> KernelContract:
+    return KernelContract(
+        kernel="phi_update",
+        vmem_budget_bytes=VMEM_BUDGET_BYTES,
+        cases=(
+            _case("tiny-rebuild", n=10, t=8, V=6, K=16, delta=False),
+            _case("tiny-delta", n=10, t=8, V=6, K=16, delta=True),
+            # paper-representative tile count at NYTimes K
+            _case("paper-delta", n=1024, t=256, V=512, K=1024, delta=True),
+        ))

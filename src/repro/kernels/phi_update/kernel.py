@@ -65,6 +65,19 @@ def _delta_kernel(meta_ref, z_new_ref, z_old_ref, mask_ref, out_ref,
     out_ref[...] += delta.astype(jnp.int32)
 
 
+def grid_layout(n: int, t: int, num_topics: int, *, delta: bool):
+    """Launch geometry: ``(grid, in_specs, out_spec)``.
+
+    Single source of truth — both wrappers launch from this and the
+    ``kernel-contract`` checker (``contract.py``) enumerates it.  The delta
+    variant carries one extra (1, t) input (z_old)."""
+    n_inputs = 3 if delta else 2
+    in_specs = [pl.BlockSpec((1, t), lambda i, meta: (i, 0))
+                for _ in range(n_inputs)]
+    out_spec = pl.BlockSpec((1, num_topics), lambda i, meta: (meta[i, 0], 0))
+    return (n,), in_specs, out_spec
+
+
 def phi_delta_tiles(
     tile_word,    # (n,) int32
     tile_first,   # (n,) int32 (1 on the first tile of each word run)
@@ -81,15 +94,12 @@ def phi_delta_tiles(
     meta = jnp.stack([tile_word.astype(jnp.int32),
                       tile_first.astype(jnp.int32)], axis=1)   # (n, 2)
 
+    grid, in_specs, out_spec = grid_layout(n, t, num_topics, delta=True)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(n,),
-        in_specs=[
-            pl.BlockSpec((1, t), lambda i, meta: (i, 0)),
-            pl.BlockSpec((1, t), lambda i, meta: (i, 0)),
-            pl.BlockSpec((1, t), lambda i, meta: (i, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, num_topics), lambda i, meta: (meta[i, 0], 0)),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
     )
     return pl.pallas_call(
         functools.partial(_delta_kernel, num_topics=num_topics),
@@ -114,14 +124,12 @@ def phi_update_tiles(
     meta = jnp.stack([tile_word.astype(jnp.int32),
                       tile_first.astype(jnp.int32)], axis=1)   # (n, 2)
 
+    grid, in_specs, out_spec = grid_layout(n, t, num_topics, delta=False)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(n,),
-        in_specs=[
-            pl.BlockSpec((1, t), lambda i, meta: (i, 0)),
-            pl.BlockSpec((1, t), lambda i, meta: (i, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, num_topics), lambda i, meta: (meta[i, 0], 0)),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
     )
     return pl.pallas_call(
         functools.partial(_kernel, num_topics=num_topics),

@@ -20,7 +20,6 @@ MODEL_FLOPS (analytic useful work):
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 
 from repro.configs.archs import ARCHS, SHAPES

@@ -36,12 +36,14 @@ def main():
     from repro.models.common import NO_SHARDING
 
     cfg = smoke(args.arch)
-    key = jax.random.key(0)
-    params = tf.init_params(key, cfg)
+    # init_params consumes k_params' stream; the prompt draw needs its own
+    # child, not the same key again
+    k_params, k_tok = jax.random.split(jax.random.key(0))
+    params = tf.init_params(k_params, cfg)
     dstate = zoo.init_decode_state(cfg, args.batch, max_len=args.max_len)
     dstep = jax.jit(zoo.make_decode_step(cfg, NO_SHARDING), donate_argnums=(1,))
 
-    tok = jax.random.randint(key, (args.batch, 1), 0, cfg.vocab_size)
+    tok = jax.random.randint(k_tok, (args.batch, 1), 0, cfg.vocab_size)
     logits, dstate = dstep(params, dstate, tok)  # compile
     t0 = time.perf_counter()
     for _ in range(args.gen):

@@ -77,6 +77,10 @@ def build_argparser() -> argparse.ArgumentParser:
                     help="disable phase-span recording (GET /trace returns "
                          "an empty trace; the bounded ring buffer is cheap, "
                          "so tracing is on by default)")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="debug mode: jax.debug_nans, transfer-guard the "
+                         "fold-in sweep, and runtime lock-held assertions "
+                         "in the engine")
     # bench-mode training knobs
     ap.add_argument("--topics", type=int, default=32)
     ap.add_argument("--train-iters", type=int, default=25)
@@ -99,12 +103,17 @@ def make_engine(args, snap):
     from repro.obs import Observability
     from repro.serve import EngineConfig, HotSwapModel, InferConfig, LDAServeEngine
 
+    sanitize = bool(getattr(args, "sanitize", False))
+    if sanitize:
+        from repro.analysis.runtime import enable_debug_nans
+        enable_debug_nans()
     model = HotSwapModel(snap)
     cfg = EngineConfig(
         max_batch=args.max_batch, max_delay_ms=args.delay_ms,
         length_buckets=tuple(args.length_buckets),
         infer=InferConfig(burn_in=args.burn_in, samples=args.samples,
-                          top_k=args.top_k, impl=args.impl, comm=args.comm))
+                          top_k=args.top_k, impl=args.impl, comm=args.comm),
+        sanitize=sanitize)
     obs = Observability.default(trace=not getattr(args, "no_trace", False))
     return model, LDAServeEngine(model, cfg, seed=args.seed, obs=obs)
 
@@ -178,12 +187,11 @@ def run_bench(args) -> int:
     from repro.serve import ShardedModelSnapshot
     from repro.serve.eval import docs_from_corpus, heldout_perplexity
 
-    corpus = None
     if not os.path.exists(args.snapshot):
         print(f"[bench] no snapshot at {args.snapshot}; training "
               f"K={args.topics} synthetic model ({args.train_iters} iters)")
         t0 = time.perf_counter()
-        corpus, _, _ = _train_and_export(args)
+        _train_and_export(args)
         print(f"[bench] trained + exported in {time.perf_counter() - t0:.1f}s")
     snap = load_model(args)
     layout = (f"V-sharded x{snap.num_shards} (comm={snap.comm})"

@@ -14,7 +14,6 @@ Sharding selection per shape:
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 from typing import Any, NamedTuple
 

@@ -50,6 +50,10 @@ def main():
                     help="force N host devices (CPU simulation)")
     ap.add_argument("--distributed", action="store_true",
                     help="call jax.distributed.initialize() (real pod)")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="debug mode: jax.debug_nans + transfer-guard the "
+                         "sampling hot path (implicit host syncs and NaN "
+                         "phi rows fail loudly)")
     args = ap.parse_args()
 
     if args.host_devices and "XLA_FLAGS" not in os.environ:
@@ -58,6 +62,9 @@ def main():
         os.execv(sys.executable, [sys.executable] + sys.argv)
 
     import jax
+    if args.sanitize:
+        from repro.analysis.runtime import enable_debug_nans
+        enable_debug_nans()
     if args.distributed:
         jax.distributed.initialize()
 
@@ -69,7 +76,6 @@ def main():
 
 def run_lda(args):
     import jax
-    import numpy as np
     from repro.core import trainer
     from repro.core.corpus import read_uci_bow
     from repro.data.synthetic import nytimes_like
@@ -108,7 +114,8 @@ def run_lda(args):
         obs = Observability.default(trace=bool(args.trace_out))
         res = trainer.train(corpus, cfg, args.iters, eval_every=ev,
                             shard=shard, callback=report, obs=obs,
-                            metrics_out=args.metrics_out)
+                            metrics_out=args.metrics_out,
+                            sanitize=args.sanitize)
         mgr.wait()
         if args.trace_out:
             print(f"[obs] trace -> {obs.tracer.export(args.trace_out)}")
@@ -143,6 +150,7 @@ def run_lda(args):
     # iteration + host phase spans (the in-step plan/sample/phi_delta/sync
     # split comes from jax.named_scope inside lda_iteration and shows up in
     # device profiles, not host spans)
+    from repro.analysis.runtime import sanitize_guards
     from repro.obs import JsonlSink, NULL_SINK, Observability
     obs = Observability.default(trace=bool(args.trace_out))
     sink = JsonlSink(args.metrics_out) if args.metrics_out else NULL_SINK
@@ -150,8 +158,9 @@ def run_lda(args):
         for it in range(it0, args.iters):
             t0 = time.perf_counter()
             with obs.tracer.span("sample", iteration=it):
-                state, stats = dl.step(state)
-                jax.block_until_ready(state.z)
+                with sanitize_guards(args.sanitize):
+                    state, stats = dl.step(state)
+                    jax.block_until_ready(state.z)
             dt = time.perf_counter() - t0
             ll = None
             if (it + 1) % 10 == 0:
@@ -198,15 +207,18 @@ def run_lm(args):
     step = jax.jit(zoo.make_train_step(cfg, policy))
     B, S = 8, 128
     for i in range(args.iters):
-        k = jax.random.fold_in(key, i)
-        toks = jax.random.randint(k, (B, S + 1), 0, cfg.vocab_size)
+        # one child key per modality: consuming the same k for tokens,
+        # frames and patches would correlate the three synthetic streams
+        k_tok, k_frames, k_patch = jax.random.split(
+            jax.random.fold_in(key, i), 3)
+        toks = jax.random.randint(k_tok, (B, S + 1), 0, cfg.vocab_size)
         batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
         if cfg.encoder_layers:
             batch["frames"] = jax.random.normal(
-                k, (B, cfg.encoder_frames, cfg.d_model), jnp.bfloat16)
+                k_frames, (B, cfg.encoder_frames, cfg.d_model), jnp.bfloat16)
         if cfg.vision_tokens:
             batch["patches"] = jax.random.normal(
-                k, (B, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+                k_patch, (B, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
         state, m = step(state, batch)
         if (i + 1) % 10 == 0:
             print(f"step {i + 1}: loss {float(m['loss']):.4f}")

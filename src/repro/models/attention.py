@@ -240,8 +240,11 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     W = min(max_len, window) if window else max_len
     shape = (batch, W, cfg.num_kv_heads, cfg.hd)
     if key is not None:  # randomized stand-in prefill (bench/serve shapes)
-        k = jax.random.normal(key, shape, dtype) * 0.02
-        v = jax.random.normal(jax.random.fold_in(key, 1), shape, dtype) * 0.02
+        # k and v each get their own child key: deriving v's key from a key
+        # already consumed by k's draw would correlate the two tensors
+        kk, kv = jax.random.split(key)
+        k = jax.random.normal(kk, shape, dtype) * 0.02
+        v = jax.random.normal(kv, shape, dtype) * 0.02
     else:
         k = jnp.zeros(shape, dtype)
         v = jnp.zeros(shape, dtype)

@@ -10,7 +10,7 @@ no-ops when the policy is disabled.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Sequence
+from typing import Any
 
 import jax
 import jax.numpy as jnp

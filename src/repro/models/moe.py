@@ -99,7 +99,6 @@ def moe_ffn_ep(p: MoEParams, cfg: ModelConfig, x: Array,
     of all_to_all is all_to_all, of all_gather is reduce-scatter — i.e. the
     ZeRO gradient flow comes out of the transpose for free.
     """
-    import numpy as np
     from jax.sharding import PartitionSpec as P
 
     from repro.distributed.partition import shard_map_compat

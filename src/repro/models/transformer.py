@@ -15,8 +15,6 @@ Structure:
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, NamedTuple
 
 import jax
@@ -140,7 +138,6 @@ class ModelParams(NamedTuple):
 
 def init_params(key, cfg: ModelConfig) -> ModelParams:
     keys = jax.random.split(key, cfg.num_blocks * len(cfg.pattern) + 4)
-    blocks = []
     ki = 0
     per_slot = []
     has_cross = cfg.encoder_layers > 0

@@ -11,7 +11,6 @@ reduced configs.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple
 
 import jax
@@ -21,7 +20,7 @@ from repro.optim import adamw
 from . import attention as attn_lib
 from . import recurrent as rec_lib
 from . import transformer as tf
-from .common import Array, LayerSpec, ModelConfig, ShardingPolicy
+from .common import Array, ModelConfig, ShardingPolicy
 
 LOSS_SEQ_CHUNK = 1024  # CE evaluated in seq chunks to bound logits memory
 

@@ -49,6 +49,8 @@ from typing import Any, Sequence
 import numpy as np
 import jax
 
+from repro.analysis.runtime import (assert_lock_held, enable_lock_sanitizer,
+                                    sanitize_guards)
 from repro.obs import LATENCY_BUCKETS_MS, SIZE_BUCKETS, Observability
 from repro.serve.infer import (InferConfig, _host_batch_from_buffer,
                                fold_in_request, pack_request_buffer,
@@ -65,6 +67,9 @@ class EngineConfig:
     length_buckets: tuple[int, ...] = (32, 64, 128, 256)
     infer: InferConfig = InferConfig()
     rate_window_s: float = 10.0   # docs_per_sec_window sliding window
+    # Debug mode: lock-held assertions in the guarded sections + a
+    # transfer guard around the sweep (implicit host syncs become errors).
+    sanitize: bool = False
 
     def batch_buckets(self) -> tuple[int, ...]:
         b, out = 1, []
@@ -104,6 +109,8 @@ class LDAServeEngine:
         self._queue: queue.Queue = queue.Queue()
         self._lock = threading.Lock()
         self._closed = False
+        if self.cfg.sanitize:
+            enable_lock_sanitizer()
         reg = self.obs.registry
         self._m_requests = reg.counter(
             "repro_serve_requests_total", "documents served")
@@ -163,6 +170,7 @@ class LDAServeEngine:
         if req.truncated:
             self._m_truncated.inc()
         with self._lock:
+            assert_lock_held(self._lock)
             if self._closed:
                 raise RuntimeError("engine stopped")
             if self._t_first is None:
@@ -195,6 +203,7 @@ class LDAServeEngine:
         """Shut down: no new submits, and every still-pending request fails
         fast (its event fires with an error) instead of hanging to timeout."""
         with self._lock:
+            assert_lock_held(self._lock)
             already = self._closed
             self._closed = True
         if not already:
@@ -229,6 +238,7 @@ class LDAServeEngine:
         gaps between traffic bursts don't drag it toward zero.
         """
         with self._lock:
+            assert_lock_held(self._lock)
             span = ((self._t_last or 0.0) - (self._t_first or 0.0))
         n = self._m_requests.value
         return dict(
@@ -361,16 +371,21 @@ class LDAServeEngine:
         with tracer.span("h2d", bytes=packed.nbytes):
             buf = self._to_device(packed, snap)    # ONE H2D for the batch
         with tracer.span("sweep", B=B, L=L, impl=cfg.infer.impl):
-            res = fold_in_request(snap, buf, cfg.infer, capacity=capacity)
+            # under sanitize, any implicit host<->device transfer inside the
+            # jitted sweep dispatch is an error
+            with sanitize_guards(cfg.sanitize):
+                res = fold_in_request(snap, buf, cfg.infer, capacity=capacity)
         with tracer.span("assemble"):
-            # np.asarray blocks on the device computation dispatched above
-            theta = np.asarray(res.theta)
-            tt = np.asarray(res.top_topics)
-            tw = np.asarray(res.top_weights)
+            # explicit D2H (blocks on the device computation dispatched
+            # above) — explicit so the sweep stays transfer-guard-clean
+            theta = jax.device_get(res.theta)
+            tt = jax.device_get(res.top_topics)
+            tw = jax.device_get(res.top_weights)
 
         now = time.perf_counter()
         with tracer.span("callback", n=len(batch)):
             with self._lock:
+                assert_lock_held(self._lock)
                 self._t_last = now
             self._m_batch_size.observe(len(batch))
             self._m_batches.inc()

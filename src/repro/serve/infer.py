@@ -56,6 +56,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import sampler, updates
+from repro.kernels.fold_in import ops as foldin_ops
 
 Array = jnp.ndarray
 
@@ -131,8 +132,6 @@ def _fold_in_rows(
     if impl != "xla":
         # kernel path (repro.kernels.fold_in): all sweeps fused on-chip,
         # per-doc partials back; draw-identical to the scan below.
-        from repro.kernels.fold_in import ops as foldin_ops
-
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
         tsum, sps, ssqs = foldin_ops.fold_in_sweeps(
@@ -158,7 +157,7 @@ def _fold_in_rows(
         p1_cum = jnp.cumsum(p1, axis=-1)
         S = p1_cum[..., -1]                               # (B, L)
 
-        u = jax.random.uniform(key_i, (B, L, 2), jnp.float32)
+        u = foldin_ops.sweep_uniforms(key_i, B, L)
         use_sparse = u[..., 0] * (S + Q) < S
         # sparse draw over the P-entry ELL cumsum
         t_sparse = (u[..., 1] * S)[..., None]
@@ -176,7 +175,7 @@ def _fold_in_rows(
         return (z_new, theta_new), (theta_new, sp, ssq)
 
     k_init, k_sweeps = jax.random.split(key)
-    z0 = jax.random.randint(k_init, (B, L), 0, K, jnp.int32)
+    z0 = foldin_ops.init_assignments(k_init, B, L, K)
     carry = (z0, _theta_counts(z0, mask, K))
     keys = jax.random.split(k_sweeps, burn_in + samples)
     with jax.named_scope("serve.sweeps"):

@@ -75,8 +75,11 @@ class ModelSnapshot:
     @functools.cached_property
     def hyper(self) -> Array:
         """[alpha, beta] staged on device once, so a serving batch never
-        re-transfers scalar hyperparams."""
-        return jnp.asarray([self.alpha, self.beta], jnp.float32)
+        re-transfers scalar hyperparams.  Explicit device_put: the first
+        access may happen inside a transfer-guarded sweep (--sanitize),
+        where an implicit jnp.asarray transfer would trip the guard."""
+        return jax.device_put(np.asarray([self.alpha, self.beta],
+                                         np.float32))
 
     def topic_words(self, k: int, n: int = 10) -> list[str]:
         """Top-n vocabulary entries of topic k (debug/explain endpoint)."""

@@ -1,10 +1,8 @@
 """Fault tolerance: atomic writes, gc, restart, canonical z round trips."""
 import os
-import time
 
 import jax
 import numpy as np
-import pytest
 
 from repro.core import trainer
 from repro.core.corpus import tile_corpus

@@ -9,7 +9,7 @@ except ImportError:
     HAVE_HYPOTHESIS = False
 
 from repro.core.corpus import (Corpus, ell_capacity, partition_by_document,
-                               tile_corpus, tile_shard)
+                               tile_corpus)
 
 
 def make_corpus(doc_ids, word_ids, D, V):

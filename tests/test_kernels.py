@@ -13,7 +13,6 @@ from repro.core import updates
 from repro.core.corpus import ell_capacity, tile_corpus
 from repro.data.synthetic import lda_corpus, zipf_corpus
 from repro.kernels.lda_sample import ops as sample_ops
-from repro.kernels.lda_sample import ref as sample_ref
 from repro.kernels.phi_update import ops as phi_ops
 
 
@@ -213,7 +212,6 @@ def test_kernel_iteration_converges(tiny_corpus):
     P = ell_capacity(tiny_corpus, K)
     kw = dict(alpha=cfg.resolved_alpha(), beta=cfg.beta,
               num_words_total=tiny_corpus.num_words)
-    from repro.core import likelihood
     lls = []
     for it in range(6):
         theta = updates.theta_from_z(state.z, shard.token_doc,

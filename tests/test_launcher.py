@@ -1,6 +1,5 @@
 """Launcher-level integration: the production entry point trains, checkpoints,
 and resumes after a simulated failure (fresh process = killed job restart)."""
-import json
 import os
 import subprocess
 import sys

@@ -13,7 +13,7 @@ from repro.models import attention as attn_lib
 from repro.models import recurrent as rec_lib
 from repro.models import transformer as tf
 from repro.models import zoo
-from repro.models.common import NO_SHARDING, LayerSpec, ModelConfig
+from repro.models.common import NO_SHARDING
 from repro.optim import adamw
 
 B, S = 2, 16
@@ -169,7 +169,6 @@ class TestMoE:
     def test_capacity_drops_are_bounded(self):
         cfg = dataclasses.replace(smoke("qwen3-moe-30b-a3b"),
                                   capacity_factor=1.0)
-        p = __import__("repro.models.moe", fromlist=["moe"])
         from repro.models import moe as moe_lib
         params = moe_lib.init_moe(KEY, cfg)
         x = jax.random.normal(KEY, (2, 32, cfg.d_model), jnp.float32)

@@ -1,7 +1,5 @@
 """Sampler semantics: draw distribution, S/Q vs dense equivalence, count
 invariants (the §6 validation strategy from DESIGN.md)."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -33,7 +31,6 @@ class TestDrawDistribution:
         self.phi_sum = jnp.asarray(rng.integers(100, 200, self.K), jnp.int32)
         theta_row = rng.integers(0, 5, self.K)
         self.theta_row = theta_row
-        P = self.K
         order = np.argsort(-theta_row, kind="stable")
         self.ell_topics = jnp.asarray(order[None, :], jnp.int32)
         self.ell_counts = jnp.asarray(theta_row[order][None, :], jnp.int32)

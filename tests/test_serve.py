@@ -1,15 +1,13 @@
 """Serving subsystem: fold-in recovery, held-out perplexity, snapshot
 round-trip, hot-swap, and engine bucketing (bounded jit cache)."""
-import os
-
 import numpy as np
 import jax
 import pytest
 
 from repro.serve import (EngineConfig, HotSwapModel, InferConfig,
                          LDAServeEngine, ModelSnapshot, heldout_perplexity,
-                         load_snapshot, save_snapshot, snapshot_from_state)
-from repro.serve.eval import docs_from_corpus, split_documents
+                         load_snapshot, save_snapshot)
+from repro.serve.eval import split_documents
 from repro.serve.infer import fold_in_config, pack_docs
 
 K, V, WORDS_PER_TOPIC = 8, 64, 8
