@@ -1,6 +1,6 @@
 """repro.analysis — project static analysis + runtime sanitizers.
 
-Four checkers gate CI (``python -m repro.analysis``):
+Six checkers gate CI (``python -m repro.analysis``):
 
 - ``prng-discipline`` — AST pass for jax PRNG key misuse (reused keys,
   discarded split children, raw draws outside the shared helpers).
@@ -12,11 +12,19 @@ Four checkers gate CI (``python -m repro.analysis``):
   lock-guarded attributes, plus the runtime ``assert_lock_held`` probe.
 - ``jit-cache`` — compile-count budgets for the public jitted entry
   points across the supported config matrix.
+- ``collective-contract`` — every ``jax.lax`` collective checked against
+  a declared scope/axis contract, plus executed traces on device-free
+  meshes: routing round-trips, partition-spec drift, and comm-byte
+  accounting cross-checked against the collectives actually traced.
+- ``dtype-flow`` — flow-sensitive integer-width pass over ``core/`` and
+  ``kernels/``: every narrowing cast and flattened index must be a
+  declared site backed by an executed witness at Table-3 corpus scale.
 
 Findings are suppressible via ``analysis-baseline.json`` (empty on a
-clean tree); the JSON report is the ``repro-analysis/v1`` schema CI
-uploads.  Runtime sanitizers (``--sanitize`` on the launch entry points)
-live in ``repro.analysis.runtime``.
+clean tree); stale suppressions are themselves BASE001 errors.  The JSON
+report is the ``repro-analysis/v1`` schema CI uploads (now with
+per-checker timings).  Runtime sanitizers (``--sanitize`` on the launch
+entry points) live in ``repro.analysis.runtime``.
 """
 from .contracts import ContractCase, KernelContract, Operand
 from .report import Finding

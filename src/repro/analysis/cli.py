@@ -8,13 +8,14 @@ from __future__ import annotations
 import argparse
 import json
 import sys
+import time
 import traceback
 from pathlib import Path
 
 from . import report as report_mod
 
 CHECKS = ("prng-discipline", "kernel-contract", "lock-discipline",
-          "jit-cache")
+          "jit-cache", "collective-contract", "dtype-flow")
 
 
 def _checker(name):
@@ -30,6 +31,12 @@ def _checker(name):
     if name == "jit-cache":
         from . import jit_cache
         return jit_cache.run
+    if name == "collective-contract":
+        from . import collectives
+        return collectives.run
+    if name == "dtype-flow":
+        from . import dtypes
+        return dtypes.run
     raise KeyError(name)
 
 
@@ -46,7 +53,8 @@ def build_argparser() -> argparse.ArgumentParser:
         prog="python -m repro.analysis",
         description="Project static-analysis suite: PRNG discipline, Pallas "
                     "kernel contracts, engine lock discipline, jit-cache "
-                    "budgets.")
+                    "budgets, collective contracts, dtype-flow overflow "
+                    "witnesses.")
     ap.add_argument("--checks", nargs="+", choices=CHECKS, metavar="CHECK",
                     help=f"subset of checkers to run (default: all of "
                          f"{', '.join(CHECKS)})")
@@ -62,6 +70,10 @@ def build_argparser() -> argparse.ArgumentParser:
                          "finding (then exit 0)")
     ap.add_argument("--list-checks", action="store_true",
                     help="list checker names and exit")
+    ap.add_argument("--max-seconds", type=float, metavar="S",
+                    help="wall-clock budget for the whole run; exceeding it "
+                         "is itself a failure (exit 1) so the suite stays "
+                         "cheap enough to gate every PR")
     return ap
 
 
@@ -79,25 +91,34 @@ def main(argv=None) -> int:
 
     selected = list(args.checks) if args.checks else list(CHECKS)
     findings = []
+    timings: dict[str, float] = {}
+    t_start = time.perf_counter()
     for name in selected:
+        t0 = time.perf_counter()
         try:
             got = _checker(name)(root)
         except Exception:
             traceback.print_exc()
             print(f"[analysis] checker '{name}' crashed", file=sys.stderr)
             return 2
-        print(f"[analysis] {name}: {len(got)} finding(s)")
+        timings[name] = time.perf_counter() - t0
+        print(f"[analysis] {name}: {len(got)} finding(s) "
+              f"[{timings[name]:.1f}s]")
         findings += got
+    elapsed = time.perf_counter() - t_start
+    timings["total"] = elapsed
 
     baseline_path = (Path(args.baseline) if args.baseline
                      else root / "analysis-baseline.json")
-    rep = report_mod.build_report(findings, selected, baseline_path)
+    rep = report_mod.build_report(findings, selected, baseline_path,
+                                  timings=timings)
 
     if args.update_baseline:
         report_mod.write_baseline(baseline_path, rep["findings"])
         print(f"[analysis] baseline updated: {baseline_path} "
               f"({rep['summary']['total']} suppression(s))")
-        rep = report_mod.build_report(findings, selected, baseline_path)
+        rep = report_mod.build_report(findings, selected, baseline_path,
+                                      timings=timings)
 
     if args.json_out:
         Path(args.json_out).write_text(json.dumps(rep, indent=1) + "\n")
@@ -106,11 +127,14 @@ def main(argv=None) -> int:
         if not r["suppressed"]:
             print(f"{r['path']}:{r['line']}: {r['code']} [{r['scope']}] "
                   f"{r['message']}")
-    for fp in rep["stale_suppressions"]:
-        print(f"[analysis] stale suppression (no longer matches): {fp}",
-              file=sys.stderr)
 
     s = rep["summary"]
     print(f"[analysis] {s['total']} finding(s): {s['suppressed']} "
-          f"suppressed, {s['unsuppressed']} unsuppressed")
+          f"suppressed, {s['unsuppressed']} unsuppressed "
+          f"[{elapsed:.1f}s total]")
+    if args.max_seconds is not None and elapsed > args.max_seconds:
+        print(f"[analysis] wall-clock budget exceeded: {elapsed:.1f}s > "
+              f"{args.max_seconds:.0f}s — the suite must stay cheap enough "
+              "to gate every PR", file=sys.stderr)
+        return 1
     return 0 if s["unsuppressed"] == 0 else 1

@@ -10,6 +10,14 @@ artifact; the committed baseline (schema ``repro-analysis-baseline/v1``,
 ``analysis-baseline.json`` at the repo root) lists suppressed fingerprints,
 each with a human justification — an empty suppression list means the tree
 is clean.
+
+Baseline hygiene: a suppression that no longer matches any finding is not
+just noise — it means the code it excused moved or was fixed, and leaving
+it in place would silently re-excuse the *next* finding that lands on the
+same fingerprint.  Stale entries therefore become BASE001 error findings
+(checker ``baseline``), counted as unsuppressed and hence gating; the fix
+path is ``--update-baseline`` (which drops them — BASE001 rows themselves
+are never written back into the baseline).
 """
 from __future__ import annotations
 
@@ -78,16 +86,23 @@ def write_baseline(path: Path, finding_dicts: list[dict]) -> None:
                  justification=f.get("justification")
                  or "TODO: justify or fix")
             for f in finding_dicts
+            # BASE001 rows describe the baseline itself; writing them back
+            # would suppress the staleness error with the stale entry
+            if f.get("checker") != "baseline"
         ],
     )
     Path(path).write_text(json.dumps(doc, indent=1) + "\n")
 
 
 def build_report(findings: list[Finding], checks: list[str],
-                 baseline_path: Path) -> dict:
+                 baseline_path: Path, timings: dict[str, float] | None = None
+                 ) -> dict:
     """Assemble the ``repro-analysis/v1`` report: every finding tagged
-    suppressed/unsuppressed against the baseline, plus stale suppressions
-    (baseline entries that matched nothing — candidates for deletion)."""
+    suppressed/unsuppressed against the baseline.  Baseline entries that
+    matched nothing surface twice — in ``stale_suppressions`` (kept for
+    report consumers) and as unsuppressible BASE001 findings, so a stale
+    baseline gates exactly like a real finding.  ``timings`` (seconds per
+    checker) is recorded verbatim when given."""
     baseline = load_baseline(baseline_path)
     rows = finalize(findings)
     matched = set()
@@ -96,12 +111,26 @@ def build_report(findings: list[Finding], checks: list[str],
         if r["suppressed"]:
             r["justification"] = baseline[r["fingerprint"]]
             matched.add(r["fingerprint"])
+    stale = sorted(set(baseline) - matched)
+    rows += finalize([
+        Finding("baseline", "BASE001", "analysis-baseline.json", 0,
+                f"stale suppression {fp!r} matches no finding — run "
+                "--update-baseline (or delete the entry) so it cannot "
+                "excuse a future finding with the same fingerprint",
+                scope=fp)
+        for fp in stale
+    ])
+    for r in rows:
+        r.setdefault("suppressed", False)
     unsup = [r for r in rows if not r["suppressed"]]
-    return dict(
+    rep = dict(
         schema=REPORT_SCHEMA,
         checks=list(checks),
         findings=rows,
-        stale_suppressions=sorted(set(baseline) - matched),
+        stale_suppressions=stale,
         summary=dict(total=len(rows), suppressed=len(rows) - len(unsup),
                      unsuppressed=len(unsup)),
     )
+    if timings is not None:
+        rep["timings"] = {k: round(v, 3) for k, v in timings.items()}
+    return rep

@@ -47,7 +47,8 @@ def global_phi_sum(phi_vk: Array, model_axes: AxisNames) -> Array:
     return maybe_psum(phi_vk.sum(axis=0), model_axes)
 
 
-def compressed_sync_phi(phi_delta: Array, data_axes: AxisNames) -> Array:
+def compressed_sync_phi(phi_delta: Array, data_axes: AxisNames,
+                        heavy_rows: Array | None = None) -> Array:
     """C7 at the collective level (beyond-paper): sync per-iteration count
     *deltas* in int16, halving the all-reduce bytes.
 
@@ -55,11 +56,19 @@ def compressed_sync_phi(phi_delta: Array, data_axes: AxisNames) -> Array:
     Addition mod 2^16 is associative, so the int16 ring-reduce returns the
     true sum whenever that sum lies in [-2^15, 2^15): per (word, topic) the
     per-iteration topic flux is bounded by the word's corpus frequency, so
-    this holds for every word with < 32768 occurrences.  Heavier words must
-    use the int32 path — ``trainer`` splits the vocabulary accordingly
-    (heavy rows int32, the long tail int16).
+    this holds for every word with < 32768 occurrences.  Heavier words take
+    the int32 path: ``heavy_rows`` — the (H,) local row ids
+    ``partition.heavy_word_rows`` derives from the corpus histogram —
+    additionally all-reduces just those rows at full width and overwrites
+    any wrapped entries with the exact sums, so the long tail stays on the
+    half-width wire.  Duplicate/padding ids are harmless (re-setting a row
+    to its exact sum is a no-op).
     """
     if not data_axes:
         return phi_delta
-    s16 = jax.lax.psum(phi_delta.astype(jnp.int16), tuple(data_axes))
-    return s16.astype(jnp.int32)
+    axes = tuple(data_axes)
+    s16 = jax.lax.psum(phi_delta.astype(jnp.int16), axes).astype(jnp.int32)
+    if heavy_rows is None or heavy_rows.shape[0] == 0:
+        return s16
+    exact = jax.lax.psum(phi_delta[heavy_rows], axes)       # (H, K) int32
+    return s16.at[heavy_rows].set(exact)

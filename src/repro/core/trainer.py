@@ -18,7 +18,8 @@ Per iteration (delayed-count semantics, exactly the paper's):
      over the sweep's moves, added to the iteration-start phi (exact in int
      arithmetic — ``phi_old + delta == rebuild(z_new)``), then replicas
      reduced+broadcast (psum, C3).  ``compressed_sync`` all-reduces the same
-     delta in int16.
+     delta in int16, with an int32 correction for the rows whose corpus
+     flux can overflow it (``heavy_rows``).
 
 Sampler backends (``LDAConfig.sampler``):
   * ``"sq"``     — the paper's sparsity-aware S/Q sampler as an XLA scan
@@ -66,6 +67,19 @@ class LDAConfig:
     def __post_init__(self):
         if self.sampler not in ("sq", "pallas", "dense"):
             raise ValueError(f"unknown sampler {self.sampler!r}")
+        # C7 only compresses what fits: init_state/sampler store topic ids
+        # as topic_dtype, so K - 1 must be representable or z wraps silently.
+        try:
+            max_topic = int(jnp.iinfo(self.topic_dtype).max)
+        except ValueError as e:
+            raise ValueError(
+                f"topic_dtype must be an integer dtype, got "
+                f"{self.topic_dtype!r}") from e
+        if self.num_topics - 1 > max_topic:
+            raise ValueError(
+                f"num_topics={self.num_topics} does not fit "
+                f"topic_dtype={jnp.dtype(self.topic_dtype).name} (max topic "
+                f"id {max_topic}); pass topic_dtype=jnp.int32")
 
     def resolved_alpha(self) -> float:
         return 50.0 / self.num_topics if self.alpha is None else self.alpha
@@ -135,6 +149,7 @@ def lda_iteration(
     base_key: Array,
     data_axes=None,
     model_axes=None,
+    heavy_rows=None,   # (H,) int32 — int32-sync rows under compressed_sync
 ) -> tuple[LDAState, IterStats]:
     """One full sweep over this shard's tokens + phi sync."""
     K = cfg.num_topics
@@ -280,8 +295,11 @@ def lda_iteration(
         if cfg.compressed_sync and data_axes:
             # beyond-paper: all-reduce the int16 per-iteration DELTA instead
             # of rebuilt int32 counts — half the bytes (C7 on the wire).
-            # Exact while the global per-entry flux fits int16 (see sync.py).
-            phi = state.phi_vk + sync.compressed_sync_phi(delta, data_axes)
+            # Exact for the long tail; rows whose corpus flux can exceed
+            # int16 ride in heavy_rows and get an int32 correction
+            # (see sync.compressed_sync_phi / partition.heavy_word_rows).
+            phi = state.phi_vk + sync.compressed_sync_phi(delta, data_axes,
+                                                          heavy_rows)
         else:
             phi = state.phi_vk + sync.sync_phi(delta, data_axes)
         phi_sum = sync.global_phi_sum(phi, model_axes)

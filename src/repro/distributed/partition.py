@@ -57,6 +57,37 @@ def shard_map_compat(f, *, mesh, in_specs, out_specs, check_vma=False):
 _CORPUS_FIELDS = ("tile_word", "token_doc", "token_mask", "tile_first",
                   "doc_length", "doc_global", "token_uid")
 
+# A word's per-iteration phi_delta entry is bounded by its corpus frequency,
+# so the int16 compressed sync (sync.compressed_sync_phi) is exact for every
+# word occurring fewer than 2**15 times; words at or above the bound take the
+# int32 correction path.
+INT16_FLUX_BOUND = 1 << 15
+
+
+def heavy_word_rows(corpus: Corpus, plan: "PartitionPlan") -> np.ndarray:
+    """Per-device local phi rows too heavy for the int16 compressed sync.
+
+    Rows of words with corpus frequency >= ``INT16_FLUX_BOUND`` can wrap the
+    int16 delta all-reduce, so ``sync.compressed_sync_phi`` re-reduces just
+    those rows in int32 and overwrites the wrapped entries with the exact
+    sums.  Returns (num_devices, H) int32 in device (doc-major) order; rows
+    are padded with row 0 — re-setting a row to its exact sum is a no-op, so
+    padding never changes the result.
+    """
+    counts = np.bincount(corpus.word_ids, minlength=corpus.num_words)
+    heavy = np.nonzero(counts >= INT16_FLUX_BOUND)[0].astype(np.int32)
+    G = plan.num_doc_shards * plan.num_word_shards
+    if plan.word_shard_of is None:      # 1d: phi is the full replicated V
+        return np.tile(heavy, (G, 1))
+    per = [np.sort(plan.word_local_id[heavy[plan.word_shard_of[heavy] == m]])
+           for m in range(plan.num_word_shards)]
+    H = max((p.size for p in per), default=0)
+    rows = np.zeros((G, H), np.int32)
+    for d in range(plan.num_doc_shards):
+        for m in range(plan.num_word_shards):
+            rows[d * plan.num_word_shards + m, : per[m].size] = per[m]
+    return rows
+
 
 # ---------------------------------------------------------------------------
 # request-side token routing (V-sharded serving, comm="all2all")
@@ -318,7 +349,10 @@ class DistributedLDA:
         self.cfg = cfg
         self.mesh = mesh
         self.corpus = corpus
-        axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        # mesh.shape (not mesh.devices.shape) so an AbstractMesh works too:
+        # the collective-contract checker traces the step on device-free
+        # meshes to verify axis names and comm accounting.
+        axis_sizes = dict(mesh.shape)
         if doc_axes is None:
             doc_axes = tuple(a for a in mesh.axis_names
                              if mode == "1d" or a not in word_axes)
@@ -331,6 +365,11 @@ class DistributedLDA:
                                              cfg.tile_tokens)
         self.plan = dataclasses.replace(plan, doc_axes=doc_axes, word_axes=word_axes)
         self.stacked = stack_shards(shards, full_dl)
+        # int32-correction rows for the int16 compressed delta sync (empty
+        # (G, 0) when off or when no word reaches the flux bound)
+        self._heavy = jnp.asarray(
+            heavy_word_rows(corpus, self.plan) if cfg.compressed_sync
+            else np.zeros((n_doc * n_word, 0), np.int32))
         self.num_tokens = corpus.num_tokens
         self._template = shards[0]  # static aux: num_words, num_docs_local
 
@@ -377,9 +416,10 @@ class DistributedLDA:
             return core_trainer.state_from_z(cfg_, unpack(c), z, iteration,
                                              data_axes=d_ax, model_axes=m_ax)
 
-        def _step(c, state, key):
+        def _step(c, heavy, state, key):
             st, stats = core_trainer.lda_iteration(
-                cfg_, unpack(c), state, key, data_axes=d_ax, model_axes=m_ax)
+                cfg_, unpack(c), state, key, data_axes=d_ax, model_axes=m_ax,
+                heavy_rows=heavy[0])
             stats = core_trainer.IterStats(
                 sparse_frac=jax.lax.pmean(stats.sparse_frac, all_ax),
                 ell_overflow=jax.lax.psum(stats.ell_overflow, all_ax)
@@ -389,17 +429,16 @@ class DistributedLDA:
             return st, stats
 
         def _ll(c, state):
+            # theta term: psum over doc shards only (d_ax is already lead in
+            # 1d mode, doc_axes in 2d)
             return core_trainer.log_likelihood(
-                cfg_, unpack(c), state,
-                data_axes=(d_ax if mode == "1d" else
-                           d_ax),  # theta term: psum over doc shards only
-                model_axes=m_ax)
+                cfg_, unpack(c), state, data_axes=d_ax, model_axes=m_ax)
 
         sm = lambda f, ins, outs: jax.jit(shard_map_compat(
             f, mesh=mesh, in_specs=ins, out_specs=outs, check_vma=False))
         self._init_fn = sm(_init, (corpus_specs, repl), state_specs)
         self._rebuild_fn = sm(_rebuild, (corpus_specs, dev, repl), state_specs)
-        self._step_fn = sm(_step, (corpus_specs, state_specs, repl),
+        self._step_fn = sm(_step, (corpus_specs, dev, state_specs, repl),
                            (state_specs, stats_specs))
         self._ll_fn = sm(_ll, (corpus_specs, state_specs), repl)
         self.state_specs = state_specs
@@ -415,7 +454,7 @@ class DistributedLDA:
     def step(self, state):
         key = jax.random.key(self.cfg.seed + 1)
         with self.mesh:
-            return self._step_fn(self.stacked, state, key)
+            return self._step_fn(self.stacked, self._heavy, state, key)
 
     def log_likelihood(self, state) -> float:
         with self.mesh:
@@ -527,4 +566,4 @@ class DistributedLDA:
     def lower_step(self):
         key = jax.random.key(0)
         state = jax.eval_shape(self._init_fn, self.stacked, key)
-        return self._step_fn.lower(self.stacked, state, key)
+        return self._step_fn.lower(self.stacked, self._heavy, state, key)

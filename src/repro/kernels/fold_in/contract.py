@@ -14,6 +14,16 @@ from repro.kernels.fold_in import kernel
 VMEM_BUDGET_BYTES = 2 * 1024 * 1024
 
 
+def _doc_slice_nB(batch: int, shards: int) -> int:
+    """Per-shard slice width the sharded serving path launches with —
+    derived from the same ``doc_slice_bounds`` the a2a fold-in slices by,
+    so the contract covers the sharded (ceil-divided, overlapping) launch
+    geometry, not just host-chosen batch sizes."""
+    from repro.distributed.partition import doc_slice_bounds
+    _, per = doc_slice_bounds(batch, shards)
+    return per
+
+
 def _case(name: str, *, nB: int, L: int, K: int, n_sweeps: int
           ) -> ContractCase:
     grid, in_specs, out_specs = kernel.grid_layout(nB, L, K, n_sweeps)
@@ -44,4 +54,8 @@ def contract() -> KernelContract:
             # paper-representative: engine's largest default bucket at
             # NYTimes K with the default 8+4 sweep schedule
             _case("paper", nB=32, L=256, K=1024, n_sweeps=12),
+            # sharded doc slice: B=10 over S=4 shards -> per-shard nB=3
+            # (ceil division, trailing slices overlap), odd L
+            _case("doc-slice", nB=_doc_slice_nB(10, 4), L=17, K=24,
+                  n_sweeps=5),
         ))

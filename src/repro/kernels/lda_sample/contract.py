@@ -24,9 +24,48 @@ def _case(name: str, *, n: int, t: int, V: int, K: int, D: int, P: int,
     token_doc = ((2 * (np.arange(n)[:, None]) + np.arange(t)[None, :] % 4)
                  % D).astype(np.int32)
     tile_word = (np.arange(n, dtype=np.int32) * 7) % V
-    plan = ops.build_chunk_plan(token_doc, C)
+    return _build(name, token_doc, tile_word, V=V, K=K, D=D, P=P, C=C)
+
+
+def _shard_case(name: str, *, K: int, P: int, C: int,
+                shard_index: int = 1) -> ContractCase:
+    """Shard-local geometry: one shard of a real 2d (doc x word) partition.
+
+    Unlike the synthetic cases, here the scalar-prefetch operands are
+    genuinely sharded — ``tile_word`` holds LPT-local row ids into a padded
+    per-shard vocabulary, ``token_doc`` holds shard-local doc ids over an
+    irregular doc subset, and ``docs_per_chunk`` is padded past this
+    shard's own need (SPMD shards share one static dpc, so every shard's
+    chunk plan must accept the global max)."""
+    from repro.core.corpus import Corpus
+    from repro.distributed import partition
+
+    rng = np.random.default_rng(5)
+    D_glob, V_glob, per_doc, t = 10, 30, 24, 8
+    corpus = Corpus(np.repeat(np.arange(D_glob, dtype=np.int32), per_doc),
+                    rng.integers(0, V_glob, D_glob * per_doc,
+                                 dtype=np.int32).astype(np.int32),
+                    D_glob, V_glob)
+    shards, _, _ = partition.build_shards(corpus, 2, 2, "2d", t)
+    shard = shards[shard_index]
+    token_doc = np.asarray(shard.token_doc)
+    probe = ops.build_chunk_plan(token_doc, C)
+    return _build(name, token_doc, np.asarray(shard.tile_word),
+                  V=shard.num_words, K=K, D=shard.num_docs_local, P=P, C=C,
+                  docs_per_chunk=probe.chunk_docs.shape[1] + 3)
+
+
+def _build(name: str, token_doc: np.ndarray, tile_word: np.ndarray, *,
+           V: int, K: int, D: int, P: int, C: int,
+           docs_per_chunk: int | None = None) -> ContractCase:
+    t = token_doc.shape[1]
+    plan = ops.build_chunk_plan(token_doc, C, docs_per_chunk=docs_per_chunk)
     chunk_docs = np.asarray(plan.chunk_docs)
     token_slot = np.asarray(plan.token_slot)
+    n = token_slot.shape[0]          # padded tile count (multiple of C)
+    token_doc = np.pad(token_doc,
+                       ((0, n - token_doc.shape[0]), (0, 0)))
+    tile_word = np.pad(tile_word, (0, n - tile_word.shape[0]))
     n_chunks, dpc = chunk_docs.shape
     grid, in_specs, out_specs, scratch = kernel.grid_layout(
         n_chunks, t, K, P, tiles_per_step=C, docs_per_chunk=dpc)
@@ -79,4 +118,8 @@ def contract() -> KernelContract:
             # chunking (scratch (C, K) int32 + two (dpc, P) ELL tables)
             _case("paper", n=128, t=256, V=512, K=1024, D=2048, P=128,
                   C=64),
+            # one real 2d-partition shard: local vocab rows, irregular doc
+            # subset, dpc padded past this shard's need, n not a multiple
+            # of C before plan padding
+            _shard_case("shard2d", K=48, P=6, C=4),
         ))

@@ -447,8 +447,6 @@ def _sharded_fold_in_fns(mesh, axis: str, num_words_total: int, burn_in: int,
             rows_back.reshape(-1, K), mode="drop").reshape(Bs, L, K)
 
         # --- sweep the doc slice (full-shape randoms, sliced) ------------
-        from repro.kernels.fold_in import ops as foldin_ops
-
         key = jax.random.wrap_key_data(key_data)
         z0, uniforms = foldin_ops.draw_fold_in_randoms(
             key, B, L, K, burn_in + samples)

@@ -320,9 +320,15 @@ class TestReportAndCli:
                              {"fingerprint": "gone:X:y#1", "reason": "old"}],
         }))
         rep = build_report([_finding()], ["prng-discipline"], base)
-        assert rep["summary"] == {"total": 1, "suppressed": 1,
-                                  "unsuppressed": 0}
+        # the stale entry gates as an unsuppressible BASE001 finding
+        assert rep["summary"] == {"total": 2, "suppressed": 1,
+                                  "unsuppressed": 1}
         assert rep["stale_suppressions"] == ["gone:X:y#1"]
+        stale_rows = [r for r in rep["findings"] if r["code"] == "BASE001"]
+        assert len(stale_rows) == 1
+        assert stale_rows[0]["checker"] == "baseline"
+        assert not stale_rows[0]["suppressed"]
+        assert "gone:X:y#1" in stale_rows[0]["message"]
 
     def test_cli_fast_checkers_gate_green(self, tmp_path):
         out = tmp_path / "report.json"
@@ -360,6 +366,259 @@ class TestReportAndCli:
         doc = json.loads((ROOT / "analysis-baseline.json").read_text())
         assert doc == {"schema": "repro-analysis-baseline/v1",
                        "suppressions": []}
+
+    def test_base001_stale_baseline_cli_roundtrip(self, tmp_path):
+        # fix the finding but keep its suppression -> BASE001 gates red;
+        # --update-baseline drops the stale entry -> green again
+        root = tmp_path / "repo"
+        bad = root / "src" / "repro" / "bad.py"
+        bad.parent.mkdir(parents=True)
+        bad.write_text(textwrap.dedent("""
+            import jax
+
+            def f(key):
+                a = jax.random.uniform(key, ())
+                b = jax.random.uniform(key, ())
+                return a + b
+        """))
+        base = root / "analysis-baseline.json"
+        out = tmp_path / "rep.json"
+        args = ["--checks", "prng-discipline", "--root", str(root),
+                "--baseline", str(base)]
+        assert cli.main(args + ["--update-baseline"]) == 0
+        bad.unlink()                       # "fix" the finding
+        assert cli.main(args + ["--json", str(out)]) == 1
+        rep = json.loads(out.read_text())
+        assert [r["code"] for r in rep["findings"]] == ["BASE001"]
+        assert cli.main(args + ["--update-baseline"]) == 0
+        assert json.loads(base.read_text())["suppressions"] == []
+        assert cli.main(args) == 0
+
+    def test_report_timings_and_budget(self, tmp_path):
+        out = tmp_path / "rep.json"
+        args = ["--checks", "prng-discipline", "lock-discipline",
+                "--root", str(ROOT), "--json", str(out)]
+        assert cli.main(args + ["--max-seconds", "240"]) == 0
+        rep = json.loads(out.read_text())
+        assert set(rep["timings"]) == {"prng-discipline", "lock-discipline",
+                                       "total"}
+        assert all(v >= 0 for v in rep["timings"].values())
+        # an exceeded budget fails the run even with zero findings
+        assert cli.main(args + ["--max-seconds", "0"]) == 1
+
+
+# ---------------------------------------------------------------------------
+# collective-contract fixtures
+# ---------------------------------------------------------------------------
+
+from repro.analysis import collectives as coll_mod  # noqa: E402
+
+
+def _coll_codes(src: str, contracts, tmp_path):
+    mod = tmp_path / "planted.py"
+    mod.write_text(textwrap.dedent(src))
+    return [f.code for f in coll_mod.scan_module(mod, "src/x.py", contracts)]
+
+
+class TestCollectiveChecker:
+    def test_cc001_axis_mismatch_flagged(self, tmp_path):
+        codes = _coll_codes("""
+            import jax
+
+            def f(x):
+                return jax.lax.psum(x, "rogue_axis")
+        """, {"f": frozenset({"ax"})}, tmp_path)
+        assert codes == ["CC001"]
+
+    def test_cc001_missing_axis_flagged(self, tmp_path):
+        codes = _coll_codes("""
+            import jax
+
+            def f(x):
+                return jax.lax.psum(x)
+        """, {"f": frozenset({"ax"})}, tmp_path)
+        assert codes == ["CC001"]
+
+    def test_cc002_undeclared_scope_flagged(self, tmp_path):
+        codes = _coll_codes("""
+            import jax
+
+            def rogue(x):
+                return jax.lax.all_gather(x, "data")
+        """, {}, tmp_path)
+        assert codes == ["CC002"]
+
+    def test_declared_scope_and_axis_clean(self, tmp_path):
+        codes = _coll_codes("""
+            import jax
+
+            def f(x, axes):
+                i = jax.lax.axis_index("data")
+                return jax.lax.psum(x, tuple(axes)) + i
+        """, {"f": frozenset({"axes", "data"})}, tmp_path)
+        assert codes == []
+
+    def test_cc003_lossy_routing_flagged(self):
+        from repro.distributed.partition import route_buckets
+
+        def lossy(owner, payload, num_shards, capacity):
+            send, src = route_buckets(owner, payload, num_shards, capacity)
+            # drop the first slot of every bucket
+            return send, src.at[:, 0].set(owner.shape[0])
+
+        fs = coll_mod.check_route_roundtrip(
+            route_fn=lossy, shard_counts=(2,), batches=((4, 16),))
+        assert fs and all(f.code == "CC003" for f in fs)
+        assert any("lossy" in f.message for f in fs)
+
+    def test_cc003_real_routing_clean(self):
+        assert coll_mod.check_route_roundtrip() == []
+
+    def test_cc004_state_spec_drift_flagged(self):
+        from jax.sharding import PartitionSpec as P
+
+        from repro.core import trainer as core_trainer
+
+        specs = core_trainer.LDAState(
+            z=P(("data", "model")),
+            phi_vk=P(("data",)),               # doc-sharded phi: the bug
+            phi_sum=P(), iteration=P())
+        fs = coll_mod.check_state_spec_table(
+            specs, {"tile_word": P(("data", "model"))}, "2d",
+            ("data",), ("model",))
+        assert fs and all(f.code == "CC004" for f in fs)
+        assert any("phi_vk" in f.message and "doc axes" in f.message
+                   for f in fs)
+
+    def test_cc004_serving_spec_drift_flagged(self):
+        fs = coll_mod.check_shard_map_specs(
+            [{0: ("shards",)}, {0: ("shards",)}, {}],
+            [{0: ("shards",)}], "shards", "psum")
+        assert fs and all(f.code == "CC004" for f in fs)
+
+    def test_cc005_byte_drift_flagged(self):
+        fs = coll_mod.check_serving_comm(
+            overrides=dict(a2a_bytes=1, psum_bytes=1))
+        assert [f.code for f in fs] == ["CC005", "CC005"]
+        assert all("bytes" in f.message for f in fs)
+
+    def test_serving_comm_clean(self):
+        assert coll_mod.check_serving_comm() == []
+
+    def test_partition_contracts_clean(self):
+        assert coll_mod.check_partition_contracts() == []
+
+    def test_real_tree_clean(self):
+        assert coll_mod.run(ROOT) == []
+
+
+# ---------------------------------------------------------------------------
+# dtype-flow fixtures
+# ---------------------------------------------------------------------------
+
+from repro.analysis import dtypes as dtypes_mod  # noqa: E402
+
+
+def _dtype_findings(src: str, tmp_path, declared=None):
+    mod = tmp_path / "planted_dt.py"
+    mod.write_text(textwrap.dedent(src))
+    events = dtypes_mod.scan_module(mod)
+    return dtypes_mod.apply_declarations(events, "src/x.py", declared or {})
+
+
+class TestDtypeChecker:
+    def test_dt001_narrowing_flagged(self, tmp_path):
+        fs, _ = _dtype_findings("""
+            import jax.numpy as jnp
+
+            def f(z):
+                return z.astype(jnp.int16)
+        """, tmp_path)
+        assert [f.code for f in fs] == ["DT001"]
+
+    def test_dt001_dynamic_width_flagged(self, tmp_path):
+        fs, _ = _dtype_findings("""
+            def g(z, ref):
+                return z.astype(ref.dtype)
+
+            def h(z, cfg):
+                return z.astype(cfg.topic_dtype)
+        """, tmp_path)
+        assert [f.code for f in fs] == ["DT001", "DT001"]
+        assert {f.scope for f in fs} == {"g", "h"}
+
+    def test_dt001_declared_site_clean(self, tmp_path):
+        declared = {("src/x.py", "f", "DT001"): "some-witness"}
+        fs, matched = _dtype_findings("""
+            import jax.numpy as jnp
+
+            def f(z):
+                return z.astype(jnp.int16)
+        """, tmp_path, declared)
+        assert fs == []
+        assert matched == set(declared)
+
+    def test_dt001_widening_clean(self, tmp_path):
+        fs, _ = _dtype_findings("""
+            import jax.numpy as jnp
+
+            def f(z):
+                return z.astype(jnp.int32) + z.astype(jnp.float32)
+        """, tmp_path)
+        assert fs == []
+
+    def test_dt002_downcast_chain_flagged(self, tmp_path):
+        fs, _ = _dtype_findings("""
+            import jax.numpy as jnp
+
+            def f(x):
+                return x.astype(jnp.int64).astype(jnp.int16)
+        """, tmp_path)
+        assert "DT002" in [f.code for f in fs]
+
+    def test_dt002_fires_even_when_declared(self, tmp_path):
+        declared = {("src/x.py", "f", "DT001"): "w",
+                    ("src/x.py", "f", "DT002"): "w"}
+        fs, _ = _dtype_findings("""
+            import jax.numpy as jnp
+
+            def f(x):
+                return x.astype(jnp.int64).astype(jnp.int16)
+        """, tmp_path, declared)
+        assert [f.code for f in fs] == ["DT002"]
+
+    def test_dt003_flattened_index_flagged(self, tmp_path):
+        fs, _ = _dtype_findings("""
+            def f(b, B, i, arr, c, C):
+                k = b * B + i
+                return arr[c * C], k
+        """, tmp_path)
+        assert [f.code for f in fs] == ["DT003", "DT003"]
+
+    def test_dt004_float_scatter_flagged(self, tmp_path):
+        fs, _ = _dtype_findings("""
+            import jax.numpy as jnp
+
+            def f(i):
+                acc = jnp.zeros((4, 4), jnp.float32)
+                return acc.at[i].add(1)
+
+            def g(i):
+                return jnp.zeros((4, 4), jnp.float32).at[i].add(1)
+
+            def ok(i):
+                acc = jnp.zeros((4, 4), jnp.int32)
+                return acc.at[i].add(1)
+        """, tmp_path)
+        assert [f.code for f in fs] == ["DT004", "DT004"]
+        assert {f.scope for f in fs} == {"f", "g"}
+
+    def test_witnesses_clear_real_tree(self):
+        for code, rel, scope, wid, fn in dtypes_mod.WITNESSES:
+            assert fn() == [], f"witness {wid} reported problems"
+
+    def test_real_tree_clean(self):
+        assert dtypes_mod.run(ROOT) == []
 
 
 # ---------------------------------------------------------------------------

@@ -193,6 +193,83 @@ def test_2d_snapshot_export_canonical():
     assert "OK" in out
 
 
+def test_heavy_word_rows_1d_and_2d():
+    """Words at/above the int16 flux bound get int32-sync rows; light words
+    do not.  1d tiles the global ids to every shard; 2d maps each heavy
+    word to its owning word shard's local row, zero-padded to a common
+    width, in doc-major device order."""
+    import numpy as np
+    from repro.core.corpus import Corpus
+    from repro.distributed import partition
+
+    bound = partition.INT16_FLUX_BOUND
+    heavy_a, heavy_b = bound + 100, bound       # both heavy (>= bound)
+    word_ids = np.concatenate([
+        np.full(heavy_a, 3), np.full(heavy_b, 7),
+        np.full(bound - 2, 5),                  # bound-1 total (one more
+                                                # below): stays light
+        np.arange(10),
+    ]).astype(np.int32)
+    doc_ids = (np.arange(word_ids.size) % 16).astype(np.int32)
+    order = np.argsort(doc_ids, kind="stable")
+    corpus = Corpus(doc_ids[order], word_ids[order], 16, 12)
+
+    plan_1d = partition.PartitionPlan("1d", ("data",), (), 4, 1)
+    rows = partition.heavy_word_rows(corpus, plan_1d)
+    assert rows.shape == (4, 2)
+    assert (rows == np.array([3, 7])).all()
+
+    shard_of = (np.arange(12) % 2).astype(np.int32)   # 3 -> shard 1, 7 -> 1
+    local_id = (np.arange(12) // 2).astype(np.int32)
+    plan_2d = partition.PartitionPlan("2d", ("data",), ("model",), 2, 2,
+                                      word_shard_of=shard_of,
+                                      word_local_id=local_id,
+                                      vocab_shard_size=6)
+    rows = partition.heavy_word_rows(corpus, plan_2d)
+    assert rows.shape == (4, 2)                  # G=4 devices, H=2 padded
+    # both heavy words live on word shard 1 (odd ids); device order is
+    # doc-major: g = d * n_word + m
+    for d in (0, 1):
+        assert rows[2 * d + 0].tolist() == [0, 0]          # shard 0: padding
+        assert rows[2 * d + 1].tolist() == [1, 3]          # local rows of 3, 7
+
+
+def test_compressed_sync_heavy_rows_exact_one_device():
+    """Regression for the int16 flux wrap: a per-entry delta beyond 2^15
+    wraps on the plain compressed path (that wrap is the hazard) and comes
+    back exact through the heavy-row int32 correction — observable even on
+    a single-device mesh, where psum is identity but the int16 round-trip
+    still truncates."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.core import sync
+    from repro.distributed.partition import shard_map_compat
+
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    delta = (jnp.zeros((4, 3), jnp.int32)
+             .at[1, 2].set(40000).at[2, 0].set(-30000).at[0, 1].set(123))
+    heavy = jnp.asarray([1, 2], jnp.int32)
+
+    def run(fn):
+        mapped = shard_map_compat(fn, mesh=mesh, in_specs=P(), out_specs=P())
+        return np.asarray(jax.jit(mapped)(delta))
+
+    wrapped = run(lambda d: sync.compressed_sync_phi(d, ("data",)))
+    assert wrapped[1, 2] == 40000 - (1 << 16)    # the silent corruption
+    assert wrapped[0, 1] == 123                  # light entries were fine
+
+    fixed = run(lambda d: sync.compressed_sync_phi(d, ("data",), heavy))
+    assert (fixed == np.asarray(delta)).all()
+
+    # duplicate/padding row ids are harmless (idempotent set)
+    padded = jnp.asarray([1, 2, 2, 0], jnp.int32)
+    fixed2 = run(lambda d: sync.compressed_sync_phi(d, ("data",), padded))
+    assert (fixed2 == np.asarray(delta)).all()
+
+
 @pytest.mark.slow
 def test_compressed_sync_matches_exact():
     """int16 delta all-reduce == int32 rebuild on small corpora (flux < 2^15)."""

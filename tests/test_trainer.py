@@ -121,6 +121,27 @@ class TestPallasSamplerParity:
         assert res.ll_per_token[-1] > res.ll_per_token[0] + 0.2, res.ll_per_token
 
 
+class TestTopicDtypeGuard:
+    """Regression (dtype-flow DT001): K beyond topic_dtype's range used to
+    wrap z silently in init_state; the config now rejects it up front."""
+
+    def test_k_too_large_for_int16_rejected(self):
+        with pytest.raises(ValueError, match="does not fit"):
+            trainer.LDAConfig(num_topics=(1 << 15) + 1)
+
+    def test_int32_escape_hatch(self):
+        cfg = trainer.LDAConfig(num_topics=(1 << 15) + 1,
+                                topic_dtype=jnp.int32)
+        assert cfg.num_topics == (1 << 15) + 1
+
+    def test_non_integer_dtype_rejected(self):
+        with pytest.raises(ValueError, match="integer dtype"):
+            trainer.LDAConfig(num_topics=8, topic_dtype=jnp.float32)
+
+    def test_boundary_k_fits(self):
+        trainer.LDAConfig(num_topics=1 << 15)   # K-1 == int16 max: fine
+
+
 def test_sweep_draws_invariant_to_tiles_per_step(tiny_corpus):
     """jax.random.split is not prefix-stable: splitting after padding made
     every draw depend on the chunk width through n_pad.  Keys now split over
