@@ -528,11 +528,15 @@ def check_state_spec_table(state_specs, corpus_specs, mode: str,
 
 
 def check_partition_contracts() -> list[Finding]:
-    """Executed CC001/CC004 over both partition modes: build DistributedLDA
-    on device-free meshes (1d data=4; 2d data=2 x model=2, compressed sync
-    on so the heavy-row int32 path traces too), check the spec tables, and
+    """Executed CC001/CC004 over the partition-mode x sampler matrix: build
+    DistributedLDA on device-free meshes (1d data=4; 2d data=2 x model=2,
+    compressed sync on so the heavy-row int32 path traces too; pallas
+    variants with micro_chunks + sync_overlap so the stacked chunk plans and
+    the per-chunk sync collective trace too), check the spec tables, and
     eval_shape init -> step -> likelihood; any trace failure means a
     collective's axis does not resolve on that mesh."""
+    import dataclasses
+
     import jax
 
     from repro.core import trainer as core_trainer
@@ -546,23 +550,32 @@ def check_partition_contracts() -> list[Finding]:
     corpus = Corpus(doc_ids, word_ids, D, V)
     cfg = core_trainer.LDAConfig(num_topics=8, tile_tokens=16,
                                  compressed_sync=True)
+    # the mesh-sharded fused sweep: stacked per-shard chunk plans ride
+    # through shard_map as data, and the overlapped per-micro-chunk
+    # phi_delta sync replaces the end-of-iteration collective
+    cfg_pallas = dataclasses.replace(cfg, sampler="pallas", micro_chunks=2,
+                                     sync_overlap=True,
+                                     tiles_per_step=4)
 
     findings: list[Finding] = []
     modes = (
-        ("1d", {"data": 4}, {}),
-        ("2d", {"data": 2, "model": 2},
+        ("1d", "1d", cfg, {"data": 4}, {}),
+        ("2d", "2d", cfg, {"data": 2, "model": 2},
+         dict(doc_axes=("data",), word_axes=("model",))),
+        ("1d-pallas", "1d", cfg_pallas, {"data": 4}, {}),
+        ("2d-pallas", "2d", cfg_pallas, {"data": 2, "model": 2},
          dict(doc_axes=("data",), word_axes=("model",))),
     )
-    for mode, axes, kwargs in modes:
+    for label, mode, case_cfg, axes, kwargs in modes:
         mesh = abstract_mesh(axes)
         try:
-            dl = partition.DistributedLDA(cfg, mesh, corpus, mode=mode,
+            dl = partition.DistributedLDA(case_cfg, mesh, corpus, mode=mode,
                                           **kwargs)
         except Exception as exc:
             findings.append(Finding(
                 CHECKER, "CC001", _PARTITION_REL, 0,
-                f"DistributedLDA({mode}) failed on a device-free mesh: "
-                f"{exc!r}", scope=f"train:{mode}"))
+                f"DistributedLDA({label}) failed on a device-free mesh: "
+                f"{exc!r}", scope=f"train:{label}"))
             continue
         findings.extend(check_state_spec_table(
             dl.state_specs, dl.corpus_specs, mode, dl.plan.doc_axes,
@@ -570,13 +583,14 @@ def check_partition_contracts() -> list[Finding]:
         try:
             key = jax.random.key(0)
             state = jax.eval_shape(dl._init_fn, dl.stacked, key)
-            jax.eval_shape(dl._step_fn, dl.stacked, dl._heavy, state, key)
+            jax.eval_shape(dl._step_fn, dl.stacked, dl._plans, dl._heavy,
+                           state, key)
             jax.eval_shape(dl._ll_fn, dl.stacked, state)
         except Exception as exc:
             findings.append(Finding(
                 CHECKER, "CC001", _PARTITION_REL, 0,
-                f"tracing the {mode} init/step/likelihood failed: {exc!r}",
-                scope=f"train:{mode}"))
+                f"tracing the {label} init/step/likelihood failed: {exc!r}",
+                scope=f"train:{label}"))
     return findings
 
 

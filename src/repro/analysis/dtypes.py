@@ -93,6 +93,10 @@ DECLARED: dict[tuple[str, str, str], str] = {
      "DT003"): "index-tile-bound",
     ("src/repro/kernels/lda_sample/ops.py", "build_chunk_plan", "DT003"):
         "index-tile-bound",
+    # WS2 micro-chunk slices m*nc:(m+1)*nc: max index is the padded tile
+    # count itself, the exact bound _w_index_tile executes
+    ("src/repro/kernels/lda_sample/ops.py", "build_sweep_plans", "DT003"):
+        "index-tile-bound",
 }
 
 

@@ -174,9 +174,70 @@ def _train_sweep_audit() -> JitAudit:
         cache_size=lda_ops._lda_sample._cache_size, run=run, max_compiles=2)
 
 
+def _train_sharded_sweep_audit() -> JitAudit:
+    """The sharded-sampler matrix: one kernel compile per shard GEOMETRY,
+    never per shard index or shard count.  build_shards pads every shard of
+    a partition to a common tile count and the driver pads chunk plans to a
+    common docs-per-chunk width, so running the fused sweep over each shard
+    of 1-, 2- and 4-way partitions must land on at most one compile per
+    distinct (n, t, dpc) signature — a recompile across shard counts here
+    is exactly the cache leak that would multiply mesh compile time by the
+    device count."""
+    import jax
+    import numpy as np
+
+    from repro.core.corpus import Corpus
+    from repro.distributed import partition
+    from repro.kernels.lda_sample import ops as lda_ops
+
+    D, V, per_doc, K, t = 12, 18, 14, 16, 8
+    rng = np.random.default_rng(7)
+    doc_ids = np.repeat(np.arange(D, dtype=np.int32), per_doc)
+    word_ids = rng.integers(0, V, D * per_doc).astype(np.int32)
+    corpus = Corpus(doc_ids, word_ids, D, V)
+    key = jax.random.key(5)
+    shard_counts = (1, 2, 4)
+    P = 3
+
+    cases = []   # (shards, plans) per shard count, shared dpc per count
+    geometries = set()
+    for S in shard_counts:
+        shards, _, _ = partition.build_shards(corpus, S, 1, "1d", t)
+        per_shard = [lda_ops.build_sweep_plans(np.asarray(s.token_doc), 1, 4)
+                     for s in shards]
+        dpc = max(p.chunk_docs.shape[1] for ps in per_shard for p in ps)
+        per_shard = [lda_ops.build_sweep_plans(np.asarray(s.token_doc), 1, 4,
+                                               docs_per_chunk=dpc)
+                     for s in shards]
+        cases.append((shards, per_shard))
+        d_max = max(s.num_docs_local for s in shards)
+        geometries.add((shards[0].tile_word.shape[0], dpc, d_max))
+
+    def run():
+        for shards, per_shard in cases:
+            d_max = max(s.num_docs_local for s in shards)
+            ell_c = np.zeros((d_max, P), np.int32)
+            ell_t = np.zeros((d_max, P), np.int32)
+            for s, plans in zip(shards, per_shard):
+                phi = np.ones((s.num_words, K), np.int32)
+                phi_sum = np.full((K,), s.num_words, np.int32)
+                lda_ops.lda_sample(
+                    s.tile_word, s.token_doc, s.token_mask,
+                    np.zeros(s.token_doc.shape, np.int32), phi, phi_sum,
+                    ell_c, ell_t, key,
+                    alpha=0.5, beta=0.01, num_words_total=V,
+                    impl="pallas", interpret=True, plan=plans[0])
+
+    return JitAudit(
+        name="train.lda_sample[sharded geometry matrix]",
+        path="src/repro/kernels/lda_sample/ops.py",
+        cache_size=lda_ops._lda_sample._cache_size, run=run,
+        max_compiles=len(geometries))
+
+
 def run(root: Path) -> list[Finding]:
     findings = []
     for build in (_serve_buffer_audit, _serve_sharded_audit,
-                  _train_sweep_audit):
+                  _train_sweep_audit, _train_sharded_sweep_audit):
         findings += audit_one(build())
     return findings

@@ -47,6 +47,25 @@ def global_phi_sum(phi_vk: Array, model_axes: AxisNames) -> Array:
     return maybe_psum(phi_vk.sum(axis=0), model_axes)
 
 
+def sync_phi_delta(phi_delta: Array, data_axes: AxisNames,
+                   heavy_rows: Array | None = None,
+                   compressed: bool = False) -> Array:
+    """One phi-delta all-reduce: compressed int16 (+ int32 heavy-row
+    corrections) when asked, plain int32 otherwise.
+
+    This is the single dispatch both sync schedules go through — the
+    end-of-iteration one-shot sync and the overlapped per-micro-chunk sync
+    (``LDAConfig.sync_overlap``).  psum is linear over int, so per-chunk
+    partial syncs sum to exactly the one-shot result; the compressed path
+    stays exact per chunk because a chunk's per-entry flux is bounded by
+    the iteration's (itself bounded by the word's corpus frequency), and
+    heavy rows are corrected in int32 either way.
+    """
+    if compressed and data_axes:
+        return compressed_sync_phi(phi_delta, data_axes, heavy_rows)
+    return sync_phi(phi_delta, data_axes)
+
+
 def compressed_sync_phi(phi_delta: Array, data_axes: AxisNames,
                         heavy_rows: Array | None = None) -> Array:
     """C7 at the collective level (beyond-paper): sync per-iteration count

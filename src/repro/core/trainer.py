@@ -34,17 +34,13 @@ Sampler backends (``LDAConfig.sampler``):
 from __future__ import annotations
 
 import dataclasses
-import functools
-import time
 from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from . import dense_sampler, likelihood, sampler, sync, updates
-from .corpus import Corpus, TiledCorpusShard, ell_capacity, tile_corpus
-from repro.analysis.runtime import sanitize_guards
+from .corpus import Corpus, TiledCorpusShard, ell_capacity
 
 Array = jnp.ndarray
 
@@ -62,6 +58,11 @@ class LDAConfig:
     #                                  | "dense" (O(K) baseline)
     topic_dtype: Any = jnp.int16     # C7
     compressed_sync: bool = False    # int16 delta all-reduce (see sync.py)
+    sync_overlap: bool = False       # WS2: sync each micro-chunk's phi_delta
+    #                                  immediately so the collective overlaps
+    #                                  the next chunk's sampling (exact: psum
+    #                                  is linear over int).  No-op when
+    #                                  micro_chunks == 1.
     seed: int = 0
 
     def __post_init__(self):
@@ -87,6 +88,19 @@ class LDAConfig:
     def kernel_interpret(self) -> bool:
         """Pallas kernels run compiled on TPU, interpreted elsewhere."""
         return jax.default_backend() != "tpu"
+
+
+def resolve_config(cfg: LDAConfig, corpus: Corpus) -> LDAConfig:
+    """The one place defaults derived from the corpus get filled in.
+
+    Every driver (``repro.train.fit`` single-host and mesh alike) resolves
+    its config exactly once through here and threads the SAME object
+    everywhere afterwards — the resolved config is what ``TrainResult.cfg``
+    surfaces for reproducibility.  Idempotent."""
+    if cfg.ell_capacity is None:
+        cfg = dataclasses.replace(
+            cfg, ell_capacity=ell_capacity(corpus, cfg.num_topics))
+    return cfg
 
 
 class LDAState(NamedTuple):
@@ -150,8 +164,26 @@ def lda_iteration(
     data_axes=None,
     model_axes=None,
     heavy_rows=None,   # (H,) int32 — int32-sync rows under compressed_sync
+    plans=None,        # tuple[ChunkPlan] x micro_chunks — pallas chunk plans
 ) -> tuple[LDAState, IterStats]:
-    """One full sweep over this shard's tokens + phi sync."""
+    """One full sweep over this shard's tokens + phi sync.
+
+    ``plans`` carries the pallas sampler's host-built chunk plans.  Left
+    ``None``, they are rebuilt here from ``shard.token_doc`` — which only
+    works when the shard is a trace-time constant (the single-host driver).
+    Traced contexts (``DistributedLDA``'s shard_map) MUST prebuild them with
+    ``ops.build_sweep_plans`` and pass them in as data; the plan arrays feed
+    the kernel's scalar-prefetch index maps, which read runtime values, so
+    traced plans are fine — only their *construction* needs concrete input.
+
+    ``cfg.sync_overlap`` (WorkSchedule2 only) moves the phi_delta all-reduce
+    inside the micro-chunk loop: each chunk's delta is synced as soon as it
+    exists, so the collective overlaps the next chunk's sampling instead of
+    serializing after the sweep.  Exact by linearity of psum over int — the
+    accumulated per-chunk syncs equal the one-shot sync bit for bit (the
+    compressed int16 path included; see ``sync.sync_phi_delta``).  Draws are
+    untouched: keys never depend on the sync schedule.
+    """
     K = cfg.num_topics
     alpha, beta = cfg.resolved_alpha(), cfg.beta
     key = jax.random.fold_in(base_key, state.iteration)
@@ -187,6 +219,7 @@ def lda_iteration(
                     shard.tile_word, shard.token_doc, shard.token_mask,
                     state.z, state.phi_vk, state.phi_sum, ell_c, ell_t, key,
                     tiles_per_step=min(cfg.tiles_per_step, n),
+                    plan=plans[0] if plans else None,
                     interpret=cfg.kernel_interpret(), **sweep_kwargs)
             sparse_frac = stats.sparse_frac
             mean_ssq = stats.mean_s_over_sq
@@ -208,6 +241,10 @@ def lda_iteration(
             z_a = jnp.concatenate([z_a, jnp.zeros((n_pad, t), z_a.dtype)])
         nc = (n + n_pad) // M
         P = ell_c.shape[1]
+        # sync_overlap: sync each chunk's phi_delta as soon as it exists —
+        # the all-reduce overlaps the next chunk's sampling (which reads
+        # only the frozen iteration-start phi, never the in-flight sum)
+        overlap = cfg.sync_overlap and M > 1
 
         if cfg.sampler == "pallas":
             # unrolled over the M micro-chunks (M is small and static): each
@@ -216,29 +253,34 @@ def lda_iteration(
             # bit-identical.  theta (and the ELL re-slice from it) is carried
             # incrementally — theta_delta, never a rebuild.
             from ..kernels.lda_sample import ops as lda_kernel
-            C = min(cfg.tiles_per_step, nc)
-            # plans come from the *host-side* tiling (shard.token_doc is a
-            # trace-time constant; the jnp-padded td_a is already a tracer)
-            td_np = np.asarray(shard.token_doc)
-            if n_pad:
-                td_np = np.concatenate(
-                    [td_np, np.zeros((n_pad, t), td_np.dtype)])
+            if plans is None:
+                # host-side tiling (shard.token_doc is a trace-time constant
+                # in the single-host driver; shard_map passes plans in)
+                plans = lda_kernel.build_sweep_plans(
+                    shard.token_doc, M, cfg.tiles_per_step)
             keys_m = jax.random.split(key, M)
             theta_c = theta
+            phi_acc = jnp.zeros_like(state.phi_vk) if overlap else None
             z_parts, sfs_l, ssqs_l = [], [], []
             for m in range(M):
                 sl = slice(m * nc, (m + 1) * nc)
                 cnts, tpcs = jax.lax.top_k(theta_c, P)
-                plan = lda_kernel.build_chunk_plan(td_np[sl], C)
                 with jax.named_scope("lda.sample"):
                     z_c, st = lda_kernel.lda_sample(
                         tw_a[sl], td_a[sl], tm_a[sl], z_a[sl],
                         state.phi_vk, state.phi_sum, cnts, tpcs, keys_m[m],
-                        plan=plan, interpret=cfg.kernel_interpret(),
+                        plan=plans[m], interpret=cfg.kernel_interpret(),
                         **sweep_kwargs)
                 delta = updates.theta_delta(z_a[sl], z_c, td_a[sl], tm_a[sl],
                                             theta_c.shape[0], K)
                 theta_c = theta_c + sync.sync_theta(delta, model_axes)
+                if overlap:
+                    with jax.named_scope("lda.phi_delta"):
+                        d_c = updates.phi_delta(z_a[sl], z_c, tw_a[sl],
+                                                tm_a[sl], shard.num_words, K)
+                    with jax.named_scope("lda.sync"):
+                        phi_acc = phi_acc + sync.sync_phi_delta(
+                            d_c, data_axes, heavy_rows, cfg.compressed_sync)
                 z_parts.append(z_c)
                 sfs_l.append(st.sparse_frac)
                 ssqs_l.append(st.mean_s_over_sq)
@@ -246,7 +288,8 @@ def lda_iteration(
             sparse_frac = jnp.stack(sfs_l).mean()
             mean_ssq = jnp.stack(ssqs_l).mean()
         else:
-            def chunk_step(theta_c, inp):
+            def chunk_step(carry, inp):
+                theta_c, phi_acc = carry if overlap else (carry, None)
                 tw, td, tm, zc, kc = inp
                 cnts, tpcs = jax.lax.top_k(theta_c, P)
                 if cfg.sampler == "sq":
@@ -262,6 +305,12 @@ def lda_iteration(
                 delta = updates.theta_delta(zc, z_c, td, tm,
                                             theta_c.shape[0], K)
                 theta_n = theta_c + sync.sync_theta(delta, model_axes)
+                if overlap:
+                    d_c = updates.phi_delta(zc, z_c, tw, tm,
+                                            shard.num_words, K)
+                    phi_acc = phi_acc + sync.sync_phi_delta(
+                        d_c, data_axes, heavy_rows, cfg.compressed_sync)
+                    return (theta_n, phi_acc), (z_c, sf, ssq)
                 return theta_n, (z_c, sf, ssq)
 
             xs = (
@@ -271,11 +320,29 @@ def lda_iteration(
                 z_a.reshape(M, nc, t),
                 jax.random.split(key, M),
             )
+            carry0 = ((theta, jnp.zeros_like(state.phi_vk)) if overlap
+                      else theta)
             with jax.named_scope("lda.sample"):
-                _, (z_chunks, sfs, ssqs) = jax.lax.scan(chunk_step, theta, xs)
+                last, (z_chunks, sfs, ssqs) = jax.lax.scan(
+                    chunk_step, carry0, xs)
+            phi_acc = last[1] if overlap else None
             z_new = z_chunks.reshape(n + n_pad, t)[:n]
             sparse_frac = sfs.mean()
             mean_ssq = ssqs.mean()
+
+    if M > 1 and cfg.sync_overlap:
+        # the per-chunk syncs above already hold the whole iteration's
+        # reduced delta: psum is linear over int32, so the accumulated sum
+        # is bit-identical to the one-shot sync below (the per-chunk
+        # scatter deltas are exact ints, compressed path included)
+        with jax.named_scope("lda.sync"):
+            phi = state.phi_vk + phi_acc
+            phi_sum = sync.global_phi_sum(phi, model_axes)
+        new_state = LDAState(z=z_new, phi_vk=phi, phi_sum=phi_sum,
+                             iteration=state.iteration + 1)
+        return new_state, IterStats(sparse_frac=sparse_frac,
+                                    ell_overflow=overflow.sum(),
+                                    mean_s_over_sq=mean_ssq)
 
     # incremental phi advance + reduce/broadcast (C3): one scatter/MXU pass
     # over the sweep's moves instead of a full count rebuild (and instead of
@@ -292,16 +359,14 @@ def lda_iteration(
             delta = updates.phi_delta(state.z, z_new, shard.tile_word,
                                       shard.token_mask, shard.num_words, K)
     with jax.named_scope("lda.sync"):
-        if cfg.compressed_sync and data_axes:
-            # beyond-paper: all-reduce the int16 per-iteration DELTA instead
-            # of rebuilt int32 counts — half the bytes (C7 on the wire).
-            # Exact for the long tail; rows whose corpus flux can exceed
-            # int16 ride in heavy_rows and get an int32 correction
-            # (see sync.compressed_sync_phi / partition.heavy_word_rows).
-            phi = state.phi_vk + sync.compressed_sync_phi(delta, data_axes,
-                                                          heavy_rows)
-        else:
-            phi = state.phi_vk + sync.sync_phi(delta, data_axes)
+        # beyond-paper wire format: compressed_sync all-reduces the int16
+        # per-iteration DELTA instead of rebuilt int32 counts — half the
+        # bytes (C7 on the wire), exact for the long tail; rows whose corpus
+        # flux can exceed int16 ride in heavy_rows and get an int32
+        # correction (see sync.compressed_sync_phi / heavy_word_rows).
+        phi = state.phi_vk + sync.sync_phi_delta(delta, data_axes,
+                                                 heavy_rows,
+                                                 cfg.compressed_sync)
         phi_sum = sync.global_phi_sum(phi, model_axes)
     new_state = LDAState(z=z_new, phi_vk=phi, phi_sum=phi_sum,
                          iteration=state.iteration + 1)
@@ -331,8 +396,9 @@ def log_likelihood(
 
 
 # ---------------------------------------------------------------------------
-# Single-host convenience driver (examples + tests); the pod-scale launcher
-# lives in repro.launch.train.
+# TrainResult is the one result type every driver returns; the unified
+# entry point is repro.train.fit (single-host AND mesh).  ``train`` below is
+# a deprecated alias kept for old call sites.
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
@@ -342,6 +408,7 @@ class TrainResult:
     tokens_per_sec: list[float]
     stats: list[tuple[float, float, float]]  # (sparse_frac, ell_overflow, S/(S+Q))
     compile_sec: float = 0.0  # jit compile time, excluded from tokens_per_sec
+    cfg: LDAConfig | None = None  # the resolved config actually trained with
 
 
 def train(
@@ -355,80 +422,15 @@ def train(
     metrics_out: str | None = None,  # per-iteration JSONL sink path
     sanitize: bool = False,        # transfer-guard the sampling hot path
 ) -> TrainResult:
-    """Single-device end-to-end driver.
+    """Deprecated alias for ``repro.train.fit`` (single-host path)."""
+    import warnings
 
-    Telemetry is host-side only (``repro.obs``): per-iteration counters and
-    latency histograms in ``obs.registry``, ``sample``/``eval`` phase spans
-    in ``obs.tracer`` (device-side phase names come from the
-    ``jax.named_scope`` annotations inside ``lda_iteration``), and — when
-    ``metrics_out`` is given — one JSONL row per iteration.  None of it
-    touches keys or traced values, so draws are bit-identical to an
-    uninstrumented run (pinned in tests/test_obs.py).
-    """
-    from repro.obs import JsonlSink, NULL_SINK, Observability
+    warnings.warn(
+        "trainer.train is deprecated; use repro.train.fit(corpus, cfg, "
+        "num_iterations, ...) — same behaviour, one entry point for "
+        "single-host and mesh training", DeprecationWarning, stacklevel=2)
+    from repro.train import fit
 
-    obs = obs if obs is not None else Observability.default(trace=False)
-    reg, tracer = obs.registry, obs.tracer
-    m_iters = reg.counter("repro_train_iterations_total", "sweeps completed")
-    m_tokens = reg.counter("repro_train_tokens_sampled_total",
-                           "tokens resampled (iterations * corpus tokens)")
-    m_iter_ms = reg.histogram("repro_train_iteration_ms",
-                              "wall time per training iteration")
-    g_tps = reg.gauge("repro_train_tokens_per_sec", "last iteration's rate")
-    g_ll = reg.gauge("repro_train_ll_per_token", "last evaluated joint LL")
-    sink = JsonlSink(metrics_out) if metrics_out else NULL_SINK
-
-    if shard is None:
-        shard = tile_corpus(corpus, 1, cfg.tile_tokens)[0]
-    if cfg.ell_capacity is None:
-        cfg = dataclasses.replace(cfg, ell_capacity=ell_capacity(corpus, cfg.num_topics))
-    key = jax.random.key(cfg.seed)
-    state = init_state(cfg, shard, key)
-
-    # AOT-compile before the loop: iteration 0 used to include jit compile
-    # time, polluting the first row of every throughput trajectory.  Compile
-    # is reported separately instead.
-    t0 = time.perf_counter()
-    with tracer.span("compile", sampler=cfg.sampler):
-        step = jax.jit(functools.partial(lda_iteration, cfg, shard)
-                       ).lower(state, key).compile()
-    compile_sec = time.perf_counter() - t0
-    ll_fn = jax.jit(functools.partial(log_likelihood, cfg, shard))
-
-    lls: list[float] = []
-    tps: list[float] = []
-    st: list[tuple[float, float, float]] = []
-    try:
-        for it in range(num_iterations):
-            t0 = time.perf_counter()
-            with tracer.span("sample", iteration=it):
-                # under --sanitize any implicit host<->device transfer in
-                # the sweep dispatch is an error (AOT compile + eval stay
-                # outside the guard: they are allowed to stage host data)
-                with sanitize_guards(sanitize):
-                    state, stats = step(state, key)
-                    state.z.block_until_ready()
-            dt = time.perf_counter() - t0
-            tps.append(shard.num_tokens / dt)
-            st.append((float(stats.sparse_frac), float(stats.ell_overflow),
-                       float(stats.mean_s_over_sq)))
-            m_iters.inc()
-            m_tokens.inc(shard.num_tokens)
-            m_iter_ms.observe(dt * 1e3)
-            g_tps.set(tps[-1])
-            ll = None
-            if (it + 1) % eval_every == 0 or it == num_iterations - 1:
-                with tracer.span("eval", iteration=it):
-                    ll = float(ll_fn(state)) / corpus.num_tokens
-                lls.append(ll)
-                g_ll.set(ll)
-                if callback:
-                    callback(it, state, ll)
-            sink.write(dict(iteration=it, seconds=dt,
-                            tokens=shard.num_tokens, tokens_per_sec=tps[-1],
-                            sparse_frac=st[-1][0], ell_overflow=st[-1][1],
-                            mean_s_over_sq=st[-1][2], ll_per_token=ll))
-    finally:
-        sink.close()
-    return TrainResult(state=state, ll_per_token=lls, tokens_per_sec=tps,
-                       stats=st, compile_sec=compile_sec)
+    return fit(corpus, cfg, num_iterations, eval_every=eval_every,
+               shard=shard, callback=callback, obs=obs,
+               metrics_out=metrics_out, sanitize=sanitize)

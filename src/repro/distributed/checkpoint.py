@@ -150,10 +150,58 @@ class CheckpointManager:
     # frozen model (phi + hyperparams) to the serving side (repro.serve).
     # Two layouts: dense `.npz` files and V-sharded `.sharded` directories
     # (per-shard blocks + manifest); listing/pruning treats them uniformly.
-    def publish_snapshot(self, state, alpha: float, beta: float,
+    def publish_snapshot(self, state=None, alpha: float | None = None,
+                         beta: float | None = None,
                          num_words_total: int | None = None,
                          vocab=None, meta: dict | None = None,
-                         shards: int | None = None) -> str:
+                         shards: int | None = None, *,
+                         partition=None, iteration: int | None = None,
+                         blocks=None, phi_sum=None, shard_of=None,
+                         local_id=None) -> str:
+        """The one snapshot-publish entry point (keyword-driven dispatch).
+
+        Three call shapes, same on-disk layouts as before:
+          * ``publish_snapshot(state, alpha, beta, ..., shards=N)`` —
+            replicated-phi state, dense ``.npz`` (or contiguous-split
+            ``.sharded/`` when ``shards > 1``);
+          * ``publish_snapshot(state, partition=dl, ..., shards=N)`` —
+            partition-aware: canonical phi for a ``DistributedLDA``-trained
+            state (hyperparams come from the partition's config);
+          * ``publish_snapshot(blocks=..., phi_sum=..., shard_of=...,
+            local_id=..., iteration=..., alpha=..., beta=...,
+            num_words_total=...)`` — pre-sharded phi blocks, no dense phi
+            anywhere.
+
+        ``DistributedLDA.publish_snapshot`` and ``publish_sharded`` are the
+        deprecated names for the last two and delegate here.
+        """
+        if partition is not None:
+            return partition._publish(self, state, vocab=vocab, meta=meta,
+                                      shards=shards)
+        if blocks is not None:
+            required = dict(iteration=iteration, phi_sum=phi_sum,
+                            shard_of=shard_of, local_id=local_id,
+                            alpha=alpha, beta=beta,
+                            num_words_total=num_words_total)
+            missing = [k for k, v in required.items() if v is None]
+            if missing:
+                raise TypeError(
+                    f"publish_snapshot(blocks=...) missing {missing}")
+            return self._publish_blocks(
+                iteration, blocks, phi_sum, shard_of, local_id, alpha=alpha,
+                beta=beta, num_words_total=num_words_total, meta=meta,
+                vocab=vocab)
+        if state is None or alpha is None or beta is None:
+            raise TypeError("publish_snapshot needs (state, alpha, beta), "
+                            "a partition=, or blocks=")
+        return self._publish_state(state, alpha, beta,
+                                   num_words_total=num_words_total,
+                                   vocab=vocab, meta=meta, shards=shards)
+
+    def _publish_state(self, state, alpha: float, beta: float,
+                       num_words_total: int | None = None,
+                       vocab=None, meta: dict | None = None,
+                       shards: int | None = None) -> str:
         from repro.serve import snapshot as snap_mod
 
         it = int(jax.device_get(state.iteration))
@@ -171,6 +219,23 @@ class CheckpointManager:
         return out
 
     def publish_sharded(self, iteration: int, blocks, phi_sum, shard_of,
+                        local_id, *, alpha: float, beta: float,
+                        num_words_total: int, meta: dict | None = None,
+                        vocab=None) -> str:
+        """Deprecated alias: ``publish_snapshot(blocks=..., ...)``."""
+        import warnings
+
+        warnings.warn(
+            "CheckpointManager.publish_sharded is deprecated; use "
+            "publish_snapshot(blocks=..., phi_sum=..., shard_of=..., "
+            "local_id=..., iteration=..., alpha=..., beta=..., "
+            "num_words_total=...)", DeprecationWarning, stacklevel=2)
+        return self._publish_blocks(iteration, blocks, phi_sum, shard_of,
+                                    local_id, alpha=alpha, beta=beta,
+                                    num_words_total=num_words_total,
+                                    meta=meta, vocab=vocab)
+
+    def _publish_blocks(self, iteration: int, blocks, phi_sum, shard_of,
                         local_id, *, alpha: float, beta: float,
                         num_words_total: int, meta: dict | None = None,
                         vocab=None) -> str:

@@ -21,6 +21,8 @@ shard axis and handed to ``jax.shard_map``.
 from __future__ import annotations
 
 import dataclasses
+import time
+import warnings
 from typing import Sequence
 
 import numpy as np
@@ -30,7 +32,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import trainer as core_trainer
 from repro.core.corpus import (
-    Corpus, TiledCorpusShard, ell_capacity, partition_by_document, tile_shard,
+    Corpus, TiledCorpusShard, partition_by_document, tile_shard,
 )
 
 Array = jnp.ndarray
@@ -343,9 +345,9 @@ class DistributedLDA:
                  mode: str = "1d",
                  doc_axes: Sequence[str] | None = None,
                  word_axes: Sequence[str] = ("model",)):
-        if cfg.ell_capacity is None:
-            cfg = dataclasses.replace(
-                cfg, ell_capacity=ell_capacity(corpus, cfg.num_topics))
+        # exactly one resolved config: every closure below binds THIS object
+        # (ell_capacity filled), and it is what TrainResult.cfg surfaces
+        cfg = core_trainer.resolve_config(cfg, corpus)
         self.cfg = cfg
         self.mesh = mesh
         self.corpus = corpus
@@ -365,6 +367,33 @@ class DistributedLDA:
                                              cfg.tile_tokens)
         self.plan = dataclasses.replace(plan, doc_axes=doc_axes, word_axes=word_axes)
         self.stacked = stack_shards(shards, full_dl)
+        # pallas sampler: host-built chunk plans per shard, stacked on the
+        # same leading shard axis and passed through shard_map as *data* —
+        # the plan-as-data trick the serving all2all path uses
+        # (plan_token_routing).  The kernel's scalar-prefetch index maps read
+        # runtime values, so traced plan arrays are fine; only construction
+        # needs a concrete token_doc, which is why it happens here.  All
+        # shards share one static docs-per-chunk width so the stacked arrays
+        # are rectangular and the jit cache stays flat across shard counts.
+        if cfg.sampler == "pallas":
+            from repro.kernels.lda_sample import ops as lda_ops
+            M = max(1, cfg.micro_chunks)
+            per_shard = [lda_ops.build_sweep_plans(
+                np.asarray(s.token_doc), M, cfg.tiles_per_step)
+                for s in shards]
+            dpc = max(p.chunk_docs.shape[1] for ps in per_shard for p in ps)
+            per_shard = [lda_ops.build_sweep_plans(
+                np.asarray(s.token_doc), M, cfg.tiles_per_step,
+                docs_per_chunk=dpc) for s in shards]
+            self._plans = tuple(
+                lda_ops.ChunkPlan(
+                    chunk_docs=jnp.stack([ps[m].chunk_docs
+                                          for ps in per_shard]),
+                    token_slot=jnp.stack([ps[m].token_slot
+                                          for ps in per_shard]))
+                for m in range(M))
+        else:
+            self._plans = ()
         # int32-correction rows for the int16 compressed delta sync (empty
         # (G, 0) when off or when no word reaches the flux bound)
         self._heavy = jnp.asarray(
@@ -416,10 +445,13 @@ class DistributedLDA:
             return core_trainer.state_from_z(cfg_, unpack(c), z, iteration,
                                              data_axes=d_ax, model_axes=m_ax)
 
-        def _step(c, heavy, state, key):
+        def _step(c, plans, heavy, state, key):
+            local_plans = tuple(
+                type(p)(chunk_docs=p.chunk_docs[0], token_slot=p.token_slot[0])
+                for p in plans) or None
             st, stats = core_trainer.lda_iteration(
                 cfg_, unpack(c), state, key, data_axes=d_ax, model_axes=m_ax,
-                heavy_rows=heavy[0])
+                heavy_rows=heavy[0], plans=local_plans)
             stats = core_trainer.IterStats(
                 sparse_frac=jax.lax.pmean(stats.sparse_frac, all_ax),
                 ell_overflow=jax.lax.psum(stats.ell_overflow, all_ax)
@@ -434,11 +466,14 @@ class DistributedLDA:
             return core_trainer.log_likelihood(
                 cfg_, unpack(c), state, data_axes=d_ax, model_axes=m_ax)
 
+        plan_specs = tuple(type(p)(chunk_docs=dev, token_slot=dev)
+                           for p in self._plans)
         sm = lambda f, ins, outs: jax.jit(shard_map_compat(
             f, mesh=mesh, in_specs=ins, out_specs=outs, check_vma=False))
         self._init_fn = sm(_init, (corpus_specs, repl), state_specs)
         self._rebuild_fn = sm(_rebuild, (corpus_specs, dev, repl), state_specs)
-        self._step_fn = sm(_step, (corpus_specs, dev, state_specs, repl),
+        self._step_fn = sm(_step,
+                           (corpus_specs, plan_specs, dev, state_specs, repl),
                            (state_specs, stats_specs))
         self._ll_fn = sm(_ll, (corpus_specs, state_specs), repl)
         self.state_specs = state_specs
@@ -451,10 +486,12 @@ class DistributedLDA:
         with self.mesh:
             return self._init_fn(self.stacked, key)
 
-    def step(self, state):
-        key = jax.random.key(self.cfg.seed + 1)
+    def step(self, state, key=None):
+        if key is None:
+            key = jax.random.key(self.cfg.seed + 1)
         with self.mesh:
-            return self._step_fn(self.stacked, self._heavy, state, key)
+            return self._step_fn(self.stacked, self._plans, self._heavy,
+                                 state, key)
 
     def log_likelihood(self, state) -> float:
         with self.mesh:
@@ -522,12 +559,22 @@ class DistributedLDA:
     def publish_snapshot(self, mgr, state, vocab=None,
                          meta: dict | None = None,
                          shards: int | None = None) -> str:
-        """Export the frozen serving model with the *canonical* phi.
+        """Deprecated: use ``CheckpointManager.publish_snapshot(state,
+        partition=self, ...)`` — the one keyword-driven publish entry point
+        (same on-disk layout, this just delegates)."""
+        warnings.warn(
+            "DistributedLDA.publish_snapshot is deprecated; call "
+            "CheckpointManager.publish_snapshot(state, partition=dl, ...) "
+            "instead", DeprecationWarning, stacklevel=2)
+        return mgr.publish_snapshot(state, partition=self, vocab=vocab,
+                                    meta=meta, shards=shards)
 
-        This is the partition-aware counterpart of
-        ``CheckpointManager.publish_snapshot`` (which assumes a replicated
-        phi and would write a word-sharded, i.e. wrong, snapshot for a
-        2D-trained state).
+    def _publish(self, mgr, state, vocab=None, meta: dict | None = None,
+                 shards: int | None = None) -> str:
+        """Partition-aware snapshot export with the *canonical* phi.
+
+        (The dense single-host path assumes a replicated phi and would write
+        a word-sharded, i.e. wrong, snapshot for a 2D-trained state.)
 
         ``shards``: emit the V-sharded serving layout instead of one dense
         ``.npz``.  When the training partition is 2D and ``shards`` equals
@@ -542,7 +589,7 @@ class DistributedLDA:
         if not shards or shards <= 1:
             state_c = state._replace(
                 phi_vk=jnp.asarray(self.gather_phi(state), jnp.int32))
-            return mgr.publish_snapshot(
+            return mgr._publish_state(
                 state_c, alpha, beta,
                 num_words_total=self.corpus.num_words, vocab=vocab,
                 meta=meta_full)
@@ -556,7 +603,7 @@ class DistributedLDA:
             blocks, shard_of, local_id = snap_mod.split_dense_phi(
                 self.gather_phi(state), shards)
             meta_full["layout"] = "contiguous"
-        return mgr.publish_sharded(
+        return mgr._publish_blocks(
             int(jax.device_get(state.iteration)), blocks,
             np.asarray(jax.device_get(state.phi_sum)), shard_of, local_id,
             alpha=alpha, beta=beta, num_words_total=self.corpus.num_words,
@@ -566,4 +613,25 @@ class DistributedLDA:
     def lower_step(self):
         key = jax.random.key(0)
         state = jax.eval_shape(self._init_fn, self.stacked, key)
-        return self._step_fn.lower(self.stacked, self._heavy, state, key)
+        return self._step_fn.lower(self.stacked, self._plans, self._heavy,
+                                   state, key)
+
+    def compile_step(self):
+        """AOT-compile the mesh step; returns ``(step, compile_sec)``.
+
+        The compiled executable is directly callable with concrete inputs,
+        so the unified driver (``repro.train.fit``) can report compile time
+        separately from sampling throughput — same accounting as the
+        single-host path's ``jit(...).lower(...).compile()``."""
+        t0 = time.perf_counter()
+        compiled = self.lower_step().compile()
+        compile_sec = time.perf_counter() - t0
+
+        def step(state, key=None):
+            if key is None:
+                key = jax.random.key(self.cfg.seed + 1)
+            with self.mesh:
+                return compiled(self.stacked, self._plans, self._heavy,
+                                state, key)
+
+        return step, compile_sec

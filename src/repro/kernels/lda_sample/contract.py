@@ -55,6 +55,49 @@ def _shard_case(name: str, *, K: int, P: int, C: int,
                   docs_per_chunk=probe.chunk_docs.shape[1] + 3)
 
 
+def _mesh_sweep_case(name: str, *, K: int, P: int, C: int,
+                     micro_chunks: int = 2, num_shards: int = 4,
+                     shard_index: int = 2,
+                     chunk_index: int = 1) -> ContractCase:
+    """One (shard, micro-chunk) slice of the mesh-sharded WS2 sweep.
+
+    This is the geometry ``DistributedLDA`` actually launches with
+    ``sampler="pallas"``: per-shard plans from ``ops.build_sweep_plans``,
+    padded to ONE global docs-per-chunk width across every shard of the
+    partition (SPMD shards must agree on static shapes), sliced per
+    micro-chunk exactly as ``lda_iteration``'s WorkSchedule2 loop slices
+    the tile arrays.  ``_build`` re-derives the plan with the same global
+    dpc, so the executed index-map checks run against the stacked-plan
+    layout bit for bit."""
+    from repro.core.corpus import Corpus
+    from repro.distributed import partition
+
+    rng = np.random.default_rng(11)
+    D_glob, V_glob, per_doc, t = 16, 24, 20, 8
+    corpus = Corpus(np.repeat(np.arange(D_glob, dtype=np.int32), per_doc),
+                    rng.integers(0, V_glob, D_glob * per_doc,
+                                 dtype=np.int32).astype(np.int32),
+                    D_glob, V_glob)
+    shards, _, _ = partition.build_shards(corpus, num_shards, 1, "1d", t)
+    per_shard = [ops.build_sweep_plans(np.asarray(s.token_doc), micro_chunks,
+                                       C) for s in shards]
+    dpc = max(p.chunk_docs.shape[1] for ps in per_shard for p in ps)
+
+    s = shards[shard_index]
+    td = np.asarray(s.token_doc)
+    tw = np.asarray(s.tile_word)
+    n, M = td.shape[0], micro_chunks
+    n_pad = -n % M
+    if n_pad:
+        td = np.concatenate([td, np.zeros((n_pad, t), td.dtype)])
+        tw = np.concatenate([tw, np.zeros(n_pad, tw.dtype)])
+    nc = (n + n_pad) // M
+    sl = slice(chunk_index * nc, (chunk_index + 1) * nc)
+    return _build(name, td[sl], tw[sl], V=s.num_words, K=K,
+                  D=s.num_docs_local, P=P, C=min(C, nc),
+                  docs_per_chunk=dpc)
+
+
 def _build(name: str, token_doc: np.ndarray, tile_word: np.ndarray, *,
            V: int, K: int, D: int, P: int, C: int,
            docs_per_chunk: int | None = None) -> ContractCase:
@@ -122,4 +165,8 @@ def contract() -> KernelContract:
             # subset, dpc padded past this shard's need, n not a multiple
             # of C before plan padding
             _shard_case("shard2d", K=48, P=6, C=4),
+            # the mesh-sharded training sweep's geometry: a micro-chunk of a
+            # 1d 4-shard partition under the global docs-per-chunk width the
+            # stacked shard_map plans share
+            _mesh_sweep_case("mesh-sweep", K=32, P=5, C=4),
         ))

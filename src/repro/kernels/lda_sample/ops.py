@@ -90,6 +90,45 @@ def build_chunk_plan(token_doc, tiles_per_step: int,
     return ChunkPlan(chunk_docs=chunk_docs, token_slot=token_slot)
 
 
+def build_sweep_plans(token_doc, micro_chunks: int, tiles_per_step: int,
+                      docs_per_chunk: int | None = None) -> tuple[ChunkPlan, ...]:
+    """Host-side chunk plans for a whole sweep — one plan per micro-chunk.
+
+    Mirrors the trainer's WorkSchedule padding exactly (pad the tile count
+    to a multiple of M with empty tiles, then chunk width C = min(tiles_per_
+    step, tiles-per-micro-chunk)) so the plans line up tile-for-tile with
+    the sliced arrays ``lda_iteration`` hands the kernel.  All plans share
+    one ``docs_per_chunk`` width; pass a larger ``docs_per_chunk`` to pad
+    further (the mesh-sharded sweep stacks plans of SPMD shards, which must
+    agree on one static dpc — see ``DistributedLDA``).
+
+    ``micro_chunks=1`` (WorkSchedule1) returns the single whole-shard plan.
+    """
+    try:
+        td = np.asarray(token_doc)
+    except jax.errors.TracerArrayConversionError as e:  # pragma: no cover
+        raise ValueError(
+            "build_sweep_plans needs a concrete token_doc (plans are static "
+            "per corpus tiling); pass plans= explicitly in traced contexts "
+            "such as shard_map") from e
+    n, t = td.shape
+    M = micro_chunks
+    n_pad = -n % M
+    if n_pad:
+        td = np.concatenate([td, np.zeros((n_pad, t), td.dtype)])
+    nc = (n + n_pad) // M
+    C = min(tiles_per_step, nc)
+    plans = [build_chunk_plan(td[m * nc:(m + 1) * nc], C) for m in range(M)]
+    dpc = max(p.chunk_docs.shape[1] for p in plans)
+    if docs_per_chunk is not None:
+        assert docs_per_chunk >= dpc, (docs_per_chunk, dpc)
+        dpc = docs_per_chunk
+    if any(p.chunk_docs.shape[1] != dpc for p in plans):
+        plans = [build_chunk_plan(td[m * nc:(m + 1) * nc], C,
+                                  docs_per_chunk=dpc) for m in range(M)]
+    return tuple(plans)
+
+
 def lda_sample(
     tile_word, token_doc, token_mask, z, phi_vk, phi_sum,
     ell_counts, ell_topics, key, *,

@@ -168,14 +168,15 @@ def _train_and_export(args, extra_iters: int = 0):
     from repro.core import trainer
     from repro.data.synthetic import lda_corpus
     from repro.serve import save_snapshot, snapshot_from_state
+    from repro.train import fit
 
     corpus = lda_corpus(num_docs=256, num_words=400,
                         num_topics=args.topics, avg_doc_len=64,
                         seed=args.seed)
     cfg = trainer.LDAConfig(num_topics=args.topics, tile_tokens=64,
                             tiles_per_step=16, seed=args.seed)
-    res = trainer.train(corpus, cfg, args.train_iters + extra_iters,
-                        eval_every=args.train_iters + extra_iters)
+    res = fit(corpus, cfg, args.train_iters + extra_iters,
+              eval_every=args.train_iters + extra_iters)
     snap = snapshot_from_state(res.state, cfg.resolved_alpha(), cfg.beta,
                                num_words_total=corpus.num_words)
     save_snapshot(args.snapshot, snap)

@@ -20,7 +20,6 @@ from __future__ import annotations
 import argparse
 import os
 import sys
-import time
 
 
 def main():
@@ -32,7 +31,7 @@ def main():
                     default="sq",
                     help="training sampler backend: the paper's S/Q scan, "
                          "the O(K) dense baseline, or the fused Pallas "
-                         "kernel sweep (runs on the single-host driver; "
+                         "kernel sweep (single-host and mesh alike; "
                          "interpret mode off-TPU)")
     ap.add_argument("--iters", type=int, default=100)
     ap.add_argument("--topics", type=int, default=1024)
@@ -75,116 +74,48 @@ def main():
 
 
 def run_lda(args):
+    import math
+
     import jax
     from repro.core import trainer
     from repro.core.corpus import read_uci_bow
     from repro.data.synthetic import nytimes_like
-    from repro.distributed.checkpoint import CheckpointManager, corpus_fingerprint
-    from repro.distributed.partition import DistributedLDA
+    from repro.obs import Observability
+    from repro.train import fit
 
     corpus = read_uci_bow(args.uci) if args.uci else nytimes_like(args.scale)
     n_dev = len(jax.devices())
-    if args.sampler == "pallas":
-        # the fused kernel's chunk plan is host-built from the concrete
-        # tiling, which the shard_map-traced DistributedLDA step can't
-        # provide — run the single-host driver (a mesh-sharded pallas
-        # sweep is the ROADMAP's next training target)
-        if n_dev > 1:
-            print(f"[note] --sampler pallas runs single-host; "
-                  f"ignoring {n_dev - 1} extra devices")
-        from repro.core.corpus import tile_corpus
-        from repro.distributed import checkpoint as ckpt
-        cfg = trainer.LDAConfig(num_topics=args.topics, sampler="pallas")
-        shard = tile_corpus(corpus, 1, cfg.tile_tokens)[0]
-        mgr = CheckpointManager(args.ckpt_dir)
-        fp = corpus_fingerprint(corpus)
-
-        def report(it, state, ll):
-            print(f"iter {it + 1:5d}  LL/token {ll:.4f}")
-            if (it + 1) % args.ckpt_every == 0:
-                z = ckpt.gather_canonical_z(state.z, shard.token_uid,
-                                            corpus.num_tokens)
-                mgr.save(int(state.iteration), z, {"fingerprint": fp})
-
-        # eval cadence must hit every --ckpt-every multiple (the callback
-        # only fires on eval iterations)
-        import math
-        from repro.obs import Observability
-        ev = math.gcd(10, max(1, args.ckpt_every))
-        obs = Observability.default(trace=bool(args.trace_out))
-        res = trainer.train(corpus, cfg, args.iters, eval_every=ev,
-                            shard=shard, callback=report, obs=obs,
-                            metrics_out=args.metrics_out,
-                            sanitize=args.sanitize)
-        mgr.wait()
-        if args.trace_out:
-            print(f"[obs] trace -> {obs.tracer.export(args.trace_out)}")
-        if args.metrics_out:
-            print(f"[obs] per-iteration metrics -> {args.metrics_out}")
-        tps = sorted(res.tokens_per_sec)[len(res.tokens_per_sec) // 2]
-        print(f"[done] compile {res.compile_sec:.1f}s  "
-              f"median {tps / 1e6:.3f}M tok/s")
-        return
-    if args.mode == "1d":
-        mesh = jax.make_mesh((n_dev,), ("data",))
-        dl_kw = dict(mode="1d", doc_axes=("data",), word_axes=())
-    else:
-        md = max(1, n_dev // 2)
-        mesh = jax.make_mesh((md, n_dev // md), ("data", "model"))
-        dl_kw = dict(mode="2d", doc_axes=("data",), word_axes=("model",))
-
     cfg = trainer.LDAConfig(num_topics=args.topics, sampler=args.sampler)
-    dl = DistributedLDA(cfg, mesh, corpus, **dl_kw)
-    mgr = CheckpointManager(args.ckpt_dir)
-    fp = corpus_fingerprint(corpus)
 
-    latest = mgr.latest()
-    if latest and latest[2].get("fingerprint") == fp:
-        it0, z, _ = latest
-        state = dl.restore(z, it0)
-        print(f"[resume] iteration {it0} on {n_dev} devices ({args.mode})")
-    else:
-        it0, state = 0, dl.init()
+    # every sampler — the fused Pallas sweep included — runs on the mesh:
+    # per-shard chunk plans travel through shard_map as data, so there is no
+    # single-host fallback anymore (see DistributedLDA)
+    mesh = None
+    if n_dev > 1:
+        if args.mode == "1d":
+            mesh = jax.make_mesh((n_dev,), ("data",))
+        else:
+            md = max(1, n_dev // 2)
+            mesh = jax.make_mesh((md, n_dev // md), ("data", "model"))
 
-    # same telemetry surface as the single-host driver: a JSONL row per
-    # iteration + host phase spans (the in-step plan/sample/phi_delta/sync
-    # split comes from jax.named_scope inside lda_iteration and shows up in
-    # device profiles, not host spans)
-    from repro.analysis.runtime import sanitize_guards
-    from repro.obs import JsonlSink, NULL_SINK, Observability
+    # eval cadence must hit every --ckpt-every multiple AND keep the
+    # every-10-iterations progress line
+    ev = math.gcd(10, max(1, args.ckpt_every))
     obs = Observability.default(trace=bool(args.trace_out))
-    sink = JsonlSink(args.metrics_out) if args.metrics_out else NULL_SINK
-    try:
-        for it in range(it0, args.iters):
-            t0 = time.perf_counter()
-            with obs.tracer.span("sample", iteration=it):
-                with sanitize_guards(args.sanitize):
-                    state, stats = dl.step(state)
-                    jax.block_until_ready(state.z)
-            dt = time.perf_counter() - t0
-            ll = None
-            if (it + 1) % 10 == 0:
-                with obs.tracer.span("eval", iteration=it):
-                    ll = float(dl.log_likelihood(state))
-                print(f"iter {it + 1:5d}  {corpus.num_tokens / dt / 1e6:7.2f}M tok/s  "
-                      f"LL/token {ll:.4f}  "
-                      f"sparse {float(stats.sparse_frac):.2f}  "
-                      f"S/(S+Q) {float(stats.mean_s_over_sq):.2f}")
-            sink.write(dict(iteration=it, seconds=dt,
-                            tokens=corpus.num_tokens,
-                            tokens_per_sec=corpus.num_tokens / dt,
-                            sparse_frac=float(stats.sparse_frac),
-                            mean_s_over_sq=float(stats.mean_s_over_sq),
-                            ll_per_token=ll))
-            if (it + 1) % args.ckpt_every == 0:
-                dl.save_checkpoint(mgr, state, {"fingerprint": fp})
-    finally:
-        sink.close()
-    mgr.wait()
+    res = fit(corpus, cfg, args.iters, mesh,
+              mode=args.mode, doc_axes=("data",),
+              word_axes=("model",) if args.mode == "2d" else (),
+              eval_every=ev, obs=obs, metrics_out=args.metrics_out,
+              sanitize=args.sanitize, checkpoint_dir=args.ckpt_dir,
+              checkpoint_every=args.ckpt_every, verbose=True)
     if args.trace_out:
         print(f"[obs] trace -> {obs.tracer.export(args.trace_out)}")
     if args.metrics_out:
         print(f"[obs] per-iteration metrics -> {args.metrics_out}")
+    if res.tokens_per_sec:   # empty when resume already covered --iters
+        tps = sorted(res.tokens_per_sec)[len(res.tokens_per_sec) // 2]
+        print(f"[done] compile {res.compile_sec:.1f}s  "
+              f"median {tps / 1e6:.3f}M tok/s")
 
 
 def run_lm(args):

@@ -1,0 +1,7 @@
+"""The unified training entry point: ``repro.train.fit``.
+
+One function trains on one device or a whole mesh — single-host and
+``DistributedLDA`` paths share the loop, the telemetry surface, the
+checkpoint/resume protocol, and the ``TrainResult`` they return.
+"""
+from .driver import fit  # noqa: F401

@@ -270,6 +270,143 @@ def test_compressed_sync_heavy_rows_exact_one_device():
     assert (fixed2 == np.asarray(delta)).all()
 
 
+def test_mesh_pallas_matches_sq_one_device_in_process():
+    """Fast gate for the mesh-sharded pallas sweep: on a 1-device mesh the
+    fused kernel must draw bit-identically to the sq scan through the same
+    shard_map plumbing (plans stacked and passed as data).  In-process so a
+    broken plan-through-shard_map path fails CI without the slow marker."""
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    from repro.core import trainer
+    from repro.data.synthetic import lda_corpus
+    from repro.distributed.partition import DistributedLDA
+
+    corpus = lda_corpus(num_docs=12, num_words=48, num_topics=4,
+                        avg_doc_len=20, seed=2)
+    cfg = trainer.LDAConfig(num_topics=4, tile_tokens=16, tiles_per_step=4,
+                            micro_chunks=2, seed=0)
+    mesh = jax.make_mesh((1,), ("data",))
+    states = {}
+    for sampler in ("sq", "pallas"):
+        c = dataclasses.replace(cfg, sampler=sampler)
+        dl = DistributedLDA(c, mesh, corpus, mode="1d", doc_axes=("data",),
+                            word_axes=())
+        state = dl.init()
+        for _ in range(2):
+            state, _ = dl.step(state)
+        states[sampler] = state
+    assert (np.asarray(states["sq"].z)
+            == np.asarray(states["pallas"].z)).all()
+    assert (np.asarray(states["sq"].phi_vk)
+            == np.asarray(states["pallas"].phi_vk)).all()
+
+
+@pytest.mark.slow
+def test_mesh_pallas_matches_sq_1d():
+    """Tentpole parity: the fused pallas sweep on an 8-shard 1d mesh draws
+    bit-identically to the sharded sq scan under the same key — across z
+    dtype (int16/int32) and both work schedules (M=1 single-chunk, M=2
+    micro-chunked)."""
+    out = run_subprocess(COMMON + textwrap.dedent("""
+        import dataclasses, jax.numpy as jnp
+        mesh = jax.make_mesh((8,), ("data",))
+        for dtype in (jnp.int16, jnp.int32):
+            for M in (1, 2):
+                states = {}
+                for sampler in ("sq", "pallas"):
+                    c = dataclasses.replace(cfg, sampler=sampler,
+                                            topic_dtype=dtype,
+                                            micro_chunks=M)
+                    dl = DistributedLDA(c, mesh, corpus, mode="1d",
+                                        doc_axes=("data",), word_axes=())
+                    state = dl.init()
+                    for _ in range(2):
+                        state, _ = dl.step(state)
+                    states[sampler] = state
+                a, b = states["sq"], states["pallas"]
+                tag = (dtype.__name__, M)
+                assert (np.asarray(a.z) == np.asarray(b.z)).all(), tag
+                assert (np.asarray(a.phi_vk) == np.asarray(b.phi_vk)).all(), tag
+                assert np.asarray(b.phi_vk).sum() == corpus.num_tokens, tag
+        print("OK")
+    """))
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_mesh_pallas_matches_sq_2d_compressed_heavy():
+    """2d (4x2) parity with the compressed int16 sync and a *planted* heavy
+    word: INT16_FLUX_BOUND patched down to 8 so real corpus words cross it
+    and the int32 heavy-row correction is genuinely on the sync path the
+    pallas sweep inherits."""
+    out = run_subprocess(COMMON + textwrap.dedent("""
+        import dataclasses, jax.numpy as jnp
+        from repro.distributed import partition
+        partition.INT16_FLUX_BOUND = 8        # plant heavy words
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        for comp in (False, True):
+            states = {}
+            for sampler in ("sq", "pallas"):
+                c = dataclasses.replace(cfg, sampler=sampler,
+                                        topic_dtype=jnp.int32,
+                                        micro_chunks=2, compressed_sync=comp)
+                dl = DistributedLDA(c, mesh, corpus, mode="2d",
+                                    doc_axes=("data",), word_axes=("model",))
+                if comp:
+                    assert dl._heavy.shape[1] > 0   # the plant took
+                state = dl.init()
+                for _ in range(2):
+                    state, _ = dl.step(state)
+                states[sampler] = state
+            a, b = states["sq"], states["pallas"]
+            assert (np.asarray(a.z) == np.asarray(b.z)).all(), comp
+            assert (np.asarray(a.phi_vk) == np.asarray(b.phi_vk)).all(), comp
+        print("OK")
+    """))
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_sync_overlap_matches_serialized():
+    """Overlapping the phi_delta all-reduce with the next micro-chunk's
+    sampling is a pure schedule change: final (z, phi_vk, phi_sum) must be
+    bit-identical to the serialized end-of-iteration sync — for both
+    samplers and both sync wire formats (exact int32 and compressed int16
+    with planted heavy rows)."""
+    out = run_subprocess(COMMON + textwrap.dedent("""
+        import dataclasses
+        from repro.distributed import partition
+        partition.INT16_FLUX_BOUND = 8
+        mesh = jax.make_mesh((8,), ("data",))
+        for sampler in ("sq", "pallas"):
+            for comp in (False, True):
+                states = {}
+                for overlap in (False, True):
+                    c = dataclasses.replace(cfg, sampler=sampler,
+                                            micro_chunks=2,
+                                            compressed_sync=comp,
+                                            sync_overlap=overlap)
+                    dl = DistributedLDA(c, mesh, corpus, mode="1d",
+                                        doc_axes=("data",), word_axes=())
+                    if comp:
+                        assert dl._heavy.shape[1] > 0
+                    state = dl.init()
+                    for _ in range(2):
+                        state, _ = dl.step(state)
+                    states[overlap] = state
+                a, b = states[False], states[True]
+                tag = (sampler, comp)
+                assert (np.asarray(a.z) == np.asarray(b.z)).all(), tag
+                assert (np.asarray(a.phi_vk) == np.asarray(b.phi_vk)).all(), tag
+                assert (np.asarray(a.phi_sum) == np.asarray(b.phi_sum)).all(), tag
+        print("OK")
+    """))
+    assert "OK" in out
+
+
 @pytest.mark.slow
 def test_compressed_sync_matches_exact():
     """int16 delta all-reduce == int32 rebuild on small corpora (flux < 2^15)."""

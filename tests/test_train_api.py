@@ -1,0 +1,207 @@
+"""The unified training-driver API: ``repro.train.fit`` dispatch, the
+resolved-config contract, and the consolidated snapshot-publish surface
+(old entry points keep working behind DeprecationWarning shims)."""
+import os
+import tempfile
+import warnings
+
+import numpy as np
+import pytest
+
+
+def _tiny():
+    from repro.core import trainer
+    from repro.data.synthetic import lda_corpus
+
+    corpus = lda_corpus(num_docs=12, num_words=48, num_topics=4,
+                        avg_doc_len=20, seed=2)
+    cfg = trainer.LDAConfig(num_topics=4, tile_tokens=16, tiles_per_step=4,
+                            seed=0)
+    return corpus, cfg
+
+
+def test_fit_matches_deprecated_train_shim():
+    """trainer.train is now a shim over repro.train.fit: it must warn and
+    produce the identical trained state (same draws, same phi)."""
+    from repro.core import trainer
+    from repro.train import fit
+
+    corpus, cfg = _tiny()
+    res_fit = fit(corpus, cfg, 3, eval_every=3)
+    with pytest.warns(DeprecationWarning, match="repro.train.fit"):
+        res_old = trainer.train(corpus, cfg, 3, eval_every=3)
+    assert (np.asarray(res_fit.state.z) == np.asarray(res_old.state.z)).all()
+    assert (np.asarray(res_fit.state.phi_vk)
+            == np.asarray(res_old.state.phi_vk)).all()
+    assert res_fit.ll_per_token[-1] == res_old.ll_per_token[-1]
+
+
+def test_fit_surfaces_resolved_config():
+    """Exactly one resolved config: TrainResult.cfg carries the filled
+    ell_capacity while the caller's cfg object stays untouched."""
+    from repro.core.corpus import ell_capacity
+    from repro.train import fit
+
+    corpus, cfg = _tiny()
+    assert cfg.ell_capacity is None
+    res = fit(corpus, cfg, 1, eval_every=1)
+    assert cfg.ell_capacity is None          # caller's config not mutated
+    assert res.cfg is not None
+    assert res.cfg.ell_capacity == ell_capacity(corpus, cfg.num_topics)
+    # resolution is idempotent — feeding the resolved cfg back changes nothing
+    res2 = fit(corpus, res.cfg, 1, eval_every=1)
+    assert res2.cfg.ell_capacity == res.cfg.ell_capacity
+
+
+def test_fit_mesh_dispatch_one_device():
+    """fit(..., mesh=) routes through DistributedLDA; the single-device mesh
+    result matches the single-host path bit for bit would be too strong
+    (different data layout), but counts and the resolved cfg must hold."""
+    import jax
+
+    from repro.core.corpus import ell_capacity
+    from repro.train import fit
+
+    corpus, cfg = _tiny()
+    mesh = jax.make_mesh((1,), ("data",))
+    res = fit(corpus, cfg, 2, mesh=mesh, mode="1d", doc_axes=("data",),
+              eval_every=2)
+    assert np.asarray(res.state.phi_vk).sum() == corpus.num_tokens
+    assert res.cfg.ell_capacity == ell_capacity(corpus, cfg.num_topics)
+    assert res.compile_sec > 0
+    assert len(res.tokens_per_sec) == 2
+    assert np.isfinite(res.ll_per_token[-1])
+
+
+def test_fit_checkpoint_resume_single_host(capsys):
+    """The single-host branch of fit owns checkpointing now: a second call
+    against the same directory resumes instead of restarting."""
+    from repro.core.corpus import tile_corpus
+    from repro.distributed.checkpoint import gather_canonical_z
+    from repro.train import fit
+
+    corpus, cfg = _tiny()
+    shard = tile_corpus(corpus, 1, cfg.tile_tokens)[0]
+
+    def canon(res):
+        return gather_canonical_z(res.state.z, shard.token_uid,
+                                  corpus.num_tokens)
+
+    with tempfile.TemporaryDirectory() as td:
+        res_a = fit(corpus, cfg, 4, eval_every=4, checkpoint_dir=td,
+                    checkpoint_every=2)
+        res_b = fit(corpus, cfg, 2, eval_every=2, checkpoint_dir=td,
+                    checkpoint_every=2)
+        res_c = fit(corpus, cfg, 4, eval_every=4, checkpoint_dir=td,
+                    checkpoint_every=2)
+    out = capsys.readouterr().out
+    assert "[resume] iteration 4 (single-host)" in out
+    # resumed run restores the uninterrupted run's final state (canonical z
+    # — tile padding slots are masked and never checkpointed)
+    assert (canon(res_c) == canon(res_a)).all()
+    assert (np.asarray(res_c.state.phi_vk)
+            == np.asarray(res_a.state.phi_vk)).all()
+    assert int(res_b.state.iteration) == 4       # no work left, state restored
+
+
+def test_publish_snapshot_unified_dense_layout():
+    """The keyword-driven publish_snapshot writes the same dense layout the
+    old positional signature did — byte-identical npz, same manifest."""
+    from repro.distributed.checkpoint import CheckpointManager
+    from repro.serve import load_snapshot
+    from repro.train import fit
+
+    corpus, cfg = _tiny()
+    res = fit(corpus, cfg, 2, eval_every=2)
+    alpha, beta = res.cfg.resolved_alpha(), res.cfg.beta
+    with tempfile.TemporaryDirectory() as ta, \
+            tempfile.TemporaryDirectory() as tb:
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            # the unified call shape must not trip the shim warnings
+            p_new = CheckpointManager(ta).publish_snapshot(
+                res.state, alpha, beta, num_words_total=corpus.num_words)
+        p_old_style = CheckpointManager(tb).publish_snapshot(
+            res.state, alpha, beta, corpus.num_words)
+        assert os.path.basename(p_new) == os.path.basename(p_old_style)
+        a, b = load_snapshot(p_new), load_snapshot(p_old_style)
+        assert (np.asarray(a.phi_vk) == np.asarray(b.phi_vk)).all()
+        assert a.num_words_total == b.num_words_total == corpus.num_words
+        assert a.alpha == b.alpha == alpha
+
+
+def test_publish_sharded_shim_matches_blocks_kwarg():
+    """publish_sharded (deprecated) and publish_snapshot(blocks=...) write
+    identical sharded layouts; missing companion kwargs raise TypeError."""
+    from repro.distributed.checkpoint import CheckpointManager
+
+    V, K = 6, 4
+    rng = np.random.default_rng(0)
+    phi = rng.integers(0, 9, (V, K)).astype(np.int32)
+    blocks = [phi[:3], phi[3:]]
+    phi_sum = phi.sum(0, dtype=np.int32)
+    shard_of = np.array([0, 0, 0, 1, 1, 1], np.int32)
+    local_id = np.array([0, 1, 2, 0, 1, 2], np.int32)
+    kw = dict(alpha=0.5, beta=0.01, num_words_total=V)
+    with tempfile.TemporaryDirectory() as ta, \
+            tempfile.TemporaryDirectory() as tb:
+        with pytest.warns(DeprecationWarning, match="publish_snapshot"):
+            p_old = CheckpointManager(ta).publish_sharded(
+                7, blocks, phi_sum, shard_of, local_id, **kw)
+        p_new = CheckpointManager(tb).publish_snapshot(
+            blocks=blocks, phi_sum=phi_sum, shard_of=shard_of,
+            local_id=local_id, iteration=7, **kw)
+        assert os.path.basename(p_old) == os.path.basename(p_new)
+        assert (sorted(os.listdir(p_old)) == sorted(os.listdir(p_new)))
+        # identical directory layout file for file: same manifest, same
+        # arrays in every npz member
+        import json
+        for name in os.listdir(p_old):
+            fa, fb = os.path.join(p_old, name), os.path.join(p_new, name)
+            if name.endswith(".json"):
+                with open(fa) as f:
+                    ja = json.load(f)
+                with open(fb) as f:
+                    jb = json.load(f)
+                assert ja == jb, name
+            else:
+                with np.load(fa) as da, np.load(fb) as db:
+                    assert sorted(da.files) == sorted(db.files), name
+                    for k in da.files:
+                        assert (da[k] == db[k]).all(), (name, k)
+        with open(os.path.join(p_new, "manifest.json")) as f:
+            manifest = json.load(f)
+        assert manifest["meta"]["iteration"] == 7
+        with pytest.raises(TypeError, match="blocks"):
+            CheckpointManager(tb).publish_snapshot(
+                blocks=blocks, phi_sum=phi_sum, **kw)
+
+
+def test_distributed_publish_shim_warns():
+    """DistributedLDA.publish_snapshot delegates to the manager's unified
+    entry point with a warning; both spellings produce the same snapshot."""
+    import jax
+
+    from repro.core import trainer
+    from repro.data.synthetic import lda_corpus
+    from repro.distributed.checkpoint import CheckpointManager
+    from repro.distributed.partition import DistributedLDA
+    from repro.serve import load_snapshot
+
+    corpus = lda_corpus(num_docs=12, num_words=48, num_topics=4,
+                        avg_doc_len=20, seed=2)
+    cfg = trainer.LDAConfig(num_topics=4, tile_tokens=16, tiles_per_step=4,
+                            seed=0)
+    mesh = jax.make_mesh((1,), ("data",))
+    dl = DistributedLDA(cfg, mesh, corpus, mode="1d", doc_axes=("data",),
+                        word_axes=())
+    state = dl.init()
+    state, _ = dl.step(state)
+    with tempfile.TemporaryDirectory() as ta, \
+            tempfile.TemporaryDirectory() as tb:
+        with pytest.warns(DeprecationWarning, match="partition="):
+            p_old = dl.publish_snapshot(CheckpointManager(ta), state)
+        p_new = CheckpointManager(tb).publish_snapshot(state, partition=dl)
+        a, b = load_snapshot(p_old), load_snapshot(p_new)
+        assert (np.asarray(a.phi_vk) == np.asarray(b.phi_vk)).all()
+        assert np.asarray(a.phi_vk).sum() == corpus.num_tokens
