@@ -53,18 +53,26 @@ def write_bench_json(path: str, bench: str, rows: list, tiny: bool = False,
 
 def paired_overhead_pct(run_baseline, run_instrumented, repeats: int = 5):
     """Observer effect, measured: alternate baseline/instrumented runs and
-    compare their median wall times.  Returns (pct, median_base_s,
-    median_inst_s); pct is clamped at 0 (noise can make the instrumented
-    median come out *faster*)."""
-    base, inst = [], []
+    take the MEDIAN OF PER-PAIR overhead ratios.  Machine drift (thermal,
+    noisy neighbours) moves both elements of a back-to-back pair nearly
+    equally and cancels out of the ratio, and the median rejects pair-level
+    outliers (GC pause, scheduler preemption) — comparing global medians
+    instead lets a mid-sequence drift masquerade as instrumentation cost.
+    Returns (pct, median_base_s, median_inst_s); pct is clamped at 0 (noise
+    can make the instrumented run come out *faster*)."""
+    base, inst, ratios = [], [], []
     for _ in range(repeats):
         t0 = time.perf_counter()
         run_baseline()
-        base.append(time.perf_counter() - t0)
+        b = time.perf_counter() - t0
         t0 = time.perf_counter()
         run_instrumented()
-        inst.append(time.perf_counter() - t0)
+        i = time.perf_counter() - t0
+        base.append(b)
+        inst.append(i)
+        ratios.append((i - b) / b)
     base.sort()
     inst.sort()
-    mb, mi = base[len(base) // 2], inst[len(inst) // 2]
-    return max(0.0, (mi - mb) / mb * 100.0), mb, mi
+    ratios.sort()
+    pct = ratios[len(ratios) // 2] * 100.0
+    return max(0.0, pct), base[len(base) // 2], inst[len(inst) // 2]

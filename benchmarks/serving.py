@@ -29,12 +29,27 @@ storm through an engine with the real metrics registry + span tracer vs the
 no-op bundle, alternating runs, medians compared.  The row asserts the
 overhead stays under 2% of the serving hot path.
 
+The sweep closes with the MLPerf-style **server scenario**: Poisson
+arrivals at multiples of the engine's measured closed-loop capacity
+(0.5x / 2x / 10x), through the bounded admission queue with a per-request
+deadline.  Each ``serving_load_{mult}x`` row records offered load, goodput
+(admitted AND served in time), shed rate (rejected + expired + shed), the
+admitted-request p99, and a ``hung`` count that must be zero — the
+overload contract is "degrade by shedding with structured reasons, never
+by hanging".
+
+``--chaos`` runs the fault-injection matrix instead (CI ``chaos-smoke``):
+every engine fault kind x every admission policy, plus the publish-failure
+rollback and corrupt-shard-load rows, asserting every injected fault fired,
+zero hung requests, and reason-labelled failures throughout.
+
 ``--json PATH`` additionally records every row as JSON in the shared BENCH
 schema (``common.write_bench_json``; the CI bench-smoke job uploads it as a
 workflow artifact); ``--tiny`` shrinks the sweep to a seconds-scale CI
 config.
 """
 import dataclasses
+import time
 
 import numpy as np
 
@@ -83,6 +98,19 @@ def _obs_overhead_row(snap, infer_cfg, L, rng, tiny):
     tiny bench configs shrink burn-in/samples to the point where the Gibbs
     sweep itself is microseconds.  Restore a serving-realistic sweep depth
     for this row (it is still sub-second end to end).
+
+    The flush delay is generous (5ms) on purpose: with a ~1ms flush the
+    continuous-batching scheduler's batch *composition* becomes timing
+    dependent, so paired runs compare different batch counts and the ratio
+    measures flush jitter, not instrumentation.  Full deterministic batches
+    make the pairing clean.
+
+    Both engines are created ONCE and the storms run against them warm:
+    per-storm engine construction drags thread spawn/join into the timing,
+    whose run-to-run variance (several %% on a shared box) is *uncorrelated*
+    within a pair and swamps the µs-scale tax being measured.  Steady-state
+    serving is also the regime the gate is about — thread lifecycle is not
+    part of the per-request hot path.
     """
     from repro.obs import Observability
     from repro.serve import EngineConfig, HotSwapModel, LDAServeEngine
@@ -92,31 +120,114 @@ def _obs_overhead_row(snap, infer_cfg, L, rng, tiny):
     V = snap.num_words
     docs = [rng.integers(0, V, L).astype(np.int32) for _ in range(n_docs)]
 
-    def storm(obs_factory):
-        def run_once():
-            eng = LDAServeEngine(
-                HotSwapModel(snap),
-                EngineConfig(max_batch=8, max_delay_ms=1.0,
-                             length_buckets=(L,), infer=infer_cfg),
-                obs=obs_factory())
-            try:
-                eng.infer(docs[0])
-                eng.infer_many(docs)
-            finally:
-                eng.stop()
-        return run_once
+    def _mk(obs):
+        return LDAServeEngine(
+            HotSwapModel(snap),
+            EngineConfig(max_batch=8, max_delay_ms=5.0,
+                         length_buckets=(L,), infer=infer_cfg),
+            obs=obs)
 
-    storm(Observability.noop)()      # warm the jit caches outside the timing
-    pct, mb, mi = paired_overhead_pct(
-        storm(Observability.noop), storm(Observability.default), repeats=5)
-    if pct >= 2.0:   # one retry at higher repeats before declaring a regression
+    eng_base = _mk(Observability.noop())
+    eng_inst = _mk(Observability.default())
+    try:
+        eng_base.infer_many(docs)   # warm jit caches + steady-state threads
+        eng_inst.infer_many(docs)
         pct, mb, mi = paired_overhead_pct(
-            storm(Observability.noop), storm(Observability.default),
-            repeats=9)
+            lambda: eng_base.infer_many(docs),
+            lambda: eng_inst.infer_many(docs), repeats=15)
+        if pct >= 2.0:   # one retry at higher repeats before declaring a regression
+            pct, mb, mi = paired_overhead_pct(
+                lambda: eng_base.infer_many(docs),
+                lambda: eng_inst.infer_many(docs), repeats=31)
+    finally:
+        eng_base.stop()
+        eng_inst.stop()
     _emit("obs_overhead_serving", mi * 1e6,
           f"overhead_pct={pct:.2f} baseline_s={mb:.4f} docs={n_docs}",
           overhead_pct=round(pct, 2), baseline_s=round(mb, 4))
     assert pct < 2.0, f"observer effect {pct:.2f}% >= 2% on the serving path"
+
+
+def _offered_load_sweep(snap, infer_cfg, L, rng, tiny):
+    """MLPerf-style server scenario: Poisson arrivals at multiples of the
+    measured closed-loop capacity, against the bounded admission queue
+    (policy ``reject``) with a per-request deadline.  The 10x point is the
+    ISSUE-10 overload flood: the engine must shed with structured reasons
+    and keep admitted p99 bounded — zero requests may hang."""
+    from repro.serve import (EngineConfig, HotSwapModel, LDAServeEngine,
+                             RejectedError)
+
+    V = snap.num_words
+    n_docs = 48 if tiny else 128
+    docs = [rng.integers(0, V, L).astype(np.int32) for _ in range(n_docs)]
+
+    def _mk(policy="block", max_queue=0, deadline=None):
+        # max_batch 8 + max_queue 8 below: the pipeline can absorb at most
+        # queue + inflight*batch + forming = 8 + 16 + 8 docs, so the 10x
+        # burst genuinely overflows admission instead of hiding in flight
+        return LDAServeEngine(HotSwapModel(snap), EngineConfig(
+            max_batch=8, max_delay_ms=1.0, length_buckets=(L,),
+            infer=infer_cfg, max_queue=max_queue, admission=policy,
+            default_deadline_ms=deadline))
+
+    # Warm EVERY batch bucket the open-loop rounds can form: Poisson
+    # arrivals at low load make small batches, and a cold (2, L) compile
+    # mid-round would be measured as multi-second serving latency.
+    eng = _mk()
+    for B in (1, 2, 4, 8):
+        eng.infer_many(docs[:B])
+    # closed-loop capacity: how fast the warm engine drains when never
+    # starved (one timed burst, capacity = docs / wall)
+    t0 = time.perf_counter()
+    eng.infer_many(docs)
+    capacity = max(n_docs / (time.perf_counter() - t0), 1.0)
+    eng.stop()
+
+    deadline_ms = 2000.0 if tiny else 1000.0
+    # the open-loop burst must outlast the pipeline's absorption capacity
+    # (queue + in-flight + the batches drained during the arrival window),
+    # or sustained overload never actually sheds
+    n_load = 3 * n_docs
+    for mult in (0.5, 2.0, 10.0):
+        nominal = capacity * mult
+        # absolute arrival deadlines: per-sleep oversleep must not
+        # accumulate (relative gaps silently cap the offered rate at the
+        # sleep granularity), and sub-granularity gaps burst-catch-up
+        arrivals = np.cumsum(rng.exponential(1.0 / nominal, size=n_load))
+        eng = _mk(policy="reject", max_queue=8, deadline=deadline_ms)
+        accepted, rejected = [], 0
+        t0 = time.perf_counter()
+        for i, t_arrive in enumerate(arrivals):
+            dt = t0 + t_arrive - time.perf_counter()
+            if dt > 0:
+                time.sleep(dt)
+            try:
+                accepted.append(eng.submit(docs[i % n_docs]))
+            except RejectedError:
+                rejected += 1
+        offered = n_load / (time.perf_counter() - t0)   # achieved, not nominal
+        hung = sum(0 if r.event.wait(30.0) else 1 for r in accepted)
+        wall = time.perf_counter() - t0
+        served = sum(1 for r in accepted
+                     if r.result is not None and "error" not in r.result)
+        s = eng.stats()
+        eng.stop()
+        shed = rejected + (len(accepted) - served)
+        goodput = served / wall
+        shed_rate = shed / n_load
+        _emit(f"serving_load_{mult:g}x", wall * 1e6 / n_load,
+              f"offered={offered:.0f}/s goodput={goodput:.0f}/s "
+              f"shed_rate={shed_rate:.2f} p99={s['p99_ms']:.1f}ms "
+              f"hung={hung}",
+              offered_docs_per_sec=round(offered, 1),
+              goodput_docs_per_sec=round(goodput, 1),
+              shed_rate=round(shed_rate, 3), p99_ms=round(s["p99_ms"], 2),
+              hung=hung)
+        assert hung == 0, f"{hung} requests hung at {mult}x offered load"
+        assert s["p99_ms"] < deadline_ms + 1000.0, s
+        # overload must be *structured*: every non-served doc is accounted
+        # for as a rejection or a reason-labelled failure
+        assert served + shed == n_load, (served, shed, n_load)
 
 
 def run(impls=IMPLS, tiny=False):
@@ -200,6 +311,136 @@ def run(impls=IMPLS, tiny=False):
     # dense engine path (the last K point's snapshot is still in scope)
     _obs_overhead_row(snap, infer, L, rng, tiny)
 
+    # server scenario: Poisson offered-load sweep incl. the 10x flood
+    _offered_load_sweep(snap, infer, L, rng, tiny)
+
+
+def run_chaos(tiny=False):
+    """The fault-injection matrix (CI ``chaos-smoke``): every engine fault
+    kind x every admission policy — plus the publish-rollback and
+    corrupt-shard-load rows — asserting the faults actually fired, no
+    request ever hangs, and all failures carry structured reasons."""
+    import os
+    import tempfile
+
+    import jax.numpy as jnp
+
+    from repro.serve import (EngineConfig, FaultPlan, HotSwapModel,
+                             InferConfig, LDAServeEngine, ModelSnapshot,
+                             PublishError, RejectedError,
+                             SnapshotIntegrityError, load_sharded_snapshot,
+                             save_sharded_snapshot)
+
+    V, K, L = 200, 16, 16
+    rng = np.random.default_rng(0)
+    phi = rng.integers(1, 30, (V, K)).astype(np.int32)
+    snap = ModelSnapshot(phi_vk=jnp.asarray(phi),
+                         phi_sum=jnp.asarray(phi.sum(0)),
+                         alpha=50.0 / K, beta=0.01, num_words_total=V)
+    icfg = InferConfig(burn_in=1, samples=1, top_k=4)
+    n_docs = 16 if tiny else 32
+    docs = [rng.integers(0, V, L).astype(np.int32) for _ in range(n_docs)]
+
+    plans = {
+        "worker_exception": "worker_exception@1x2",
+        "worker_crash": "worker_crash@1x2",
+        "device_oom": "device_oom@1x3",
+        "slow_batch": "slow_batch@1x2:0.02",
+    }
+    total_hung = 0
+    for kind, spec in plans.items():
+        for policy in ("block", "reject", "shed_oldest"):
+            plan = FaultPlan.parse(spec)
+            eng = LDAServeEngine(HotSwapModel(snap), EngineConfig(
+                max_batch=4, max_delay_ms=2.0, length_buckets=(L,),
+                infer=icfg, max_queue=8, admission=policy,
+                oom_backoff_ms=0.5, fault_plan=plan))
+            t0 = time.perf_counter()
+            accepted, rejected = [], 0
+            for d in docs:
+                try:
+                    accepted.append(eng.submit(d))
+                except RejectedError:
+                    rejected += 1
+            hung = sum(0 if r.event.wait(30.0) else 1 for r in accepted)
+            wall = time.perf_counter() - t0
+            s = eng.stats()
+            eng.stop()
+            fired = plan.fired()
+            served = sum(1 for r in accepted
+                         if r.result is not None and "error" not in r.result)
+            failed = len(accepted) - served
+            total_hung += hung
+            _emit(f"chaos_{kind}_{policy}", wall * 1e6 / n_docs,
+                  f"served={served} failed={failed} rejected={rejected} "
+                  f"fired={fired.get(kind, 0)} hung={hung}",
+                  served=served, failed=failed, rejected=rejected,
+                  fired=fired.get(kind, 0), hung=hung)
+            assert fired.get(kind, 0) >= 1, (kind, policy, fired)
+            assert hung == 0, f"{hung} hung requests under {kind}/{policy}"
+            # every failed request carries a structured reason label
+            labelled = sum(s["errors_by_reason"].values())
+            assert labelled >= failed, (s["errors_by_reason"], failed)
+
+    # recovery is automatic: after the plan is exhausted a fresh storm on a
+    # faulted engine serves clean (worker restarted, queue drained)
+    plan = FaultPlan.parse("worker_crash@0")
+    eng = LDAServeEngine(HotSwapModel(snap), EngineConfig(
+        max_batch=4, max_delay_ms=2.0, length_buckets=(L,), infer=icfg,
+        fault_plan=plan))
+    try:
+        eng.infer(docs[0], timeout=30.0)
+    except RuntimeError:
+        pass
+    res = eng.infer_many(docs[:8], timeout=30.0)   # post-crash traffic
+    s = eng.stats()
+    eng.stop()
+    _emit("chaos_recovery_after_crash", 1.0,
+          f"served={len(res)} restarts={s['worker_restarts']:.0f}",
+          served=len(res), restarts=s["worker_restarts"])
+    assert len(res) == 8 and s["worker_restarts"] >= 1, s
+
+    # publish failure: the flip never happens, readers keep the last good
+    # snapshot (rollback is structural)
+    model = HotSwapModel(snap, fault_plan=FaultPlan.parse("publish_failure@0"))
+    v0 = model.version
+    try:
+        model.publish(snap)
+        raise AssertionError("publish_failure did not fire")
+    except PublishError:
+        pass
+    assert model.version == v0 and model.acquire()[1] is snap
+    assert model.publish(snap) == v0 + 1   # next publish succeeds
+    _emit("chaos_publish_rollback", 1.0,
+          f"version_kept={v0} publish_failures={model.publish_failures}",
+          publish_failures=model.publish_failures)
+
+    # corrupt shard load: structured SnapshotIntegrityError, not garbage phi
+    with tempfile.TemporaryDirectory() as td:
+        p = os.path.join(td, "m.sharded")
+        save_sharded_snapshot(p, snap, num_shards=2)
+        try:
+            load_sharded_snapshot(
+                p, fault_plan=FaultPlan.parse("shard_load_error@0"))
+            raise AssertionError("shard_load_error did not fire")
+        except SnapshotIntegrityError:
+            pass
+        # and a genuinely corrupt file trips the crc32 check the same way
+        shard0 = os.path.join(p, "shard_0000.npz")
+        raw = bytearray(open(shard0, "rb").read())
+        raw[len(raw) // 2] ^= 0xFF
+        open(shard0, "wb").write(bytes(raw))
+        try:
+            load_sharded_snapshot(p)
+            raise AssertionError("crc32 mismatch not detected")
+        except SnapshotIntegrityError:
+            pass
+    _emit("chaos_shard_load_error", 1.0, "integrity errors raised")
+
+    _emit("chaos_summary", 1.0, f"hung_requests={total_hung}",
+          hung_requests=total_hung)
+    assert total_hung == 0
+
 
 def main(argv=None) -> int:
     """Standalone entry: ``python -m benchmarks.serving --impl pallas``."""
@@ -212,13 +453,19 @@ def main(argv=None) -> int:
                     help="fold-in implementation(s) to time")
     ap.add_argument("--tiny", action="store_true",
                     help="seconds-scale sweep for the CI bench-smoke job")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run the fault-injection matrix instead of the "
+                         "perf sweep (CI chaos-smoke job)")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write every row as JSON (CI artifact)")
     args = ap.parse_args(argv)
     if args.json:
         _ROWS = []
     print("name,us_per_call,derived")
-    run(impls=tuple(args.impl), tiny=args.tiny)
+    if args.chaos:
+        run_chaos(tiny=args.tiny)
+    else:
+        run(impls=tuple(args.impl), tiny=args.tiny)
     if args.json:
         write_bench_json(args.json, "serving", _ROWS, tiny=args.tiny)
     return 0

@@ -235,9 +235,63 @@ def _train_sharded_sweep_audit() -> JitAudit:
         max_compiles=len(geometries))
 
 
+def _serve_engine_audit() -> JitAudit:
+    """The continuous-batching engine end to end: live traffic across the
+    (B, L) bucket matrix — including an injected device-OOM whose fallback
+    re-dispatches at a *smaller* batch bucket — must stay inside the bucket
+    budget.  This is the scheduler-level twin of the fold_in_buffer audit:
+    admission, deadline reaping and OOM splitting may only ever land on
+    bucket shapes already in the matrix, never mint new compiles."""
+    import numpy as np
+
+    from repro.serve import infer
+    from repro.serve.engine import EngineConfig, LDAServeEngine
+    from repro.serve.faults import FaultPlan
+    from repro.serve.snapshot import HotSwapModel, ModelSnapshot
+
+    import jax.numpy as jnp
+
+    V, K = 29, 8
+    phi = (np.arange(V * K, dtype=np.int32).reshape(V, K) % 5) + 1
+    snap = ModelSnapshot(
+        phi_vk=jnp.asarray(phi),
+        phi_sum=jnp.asarray(phi.sum(0, dtype=np.int32)),
+        alpha=0.1, beta=0.01, num_words_total=V)
+    icfg = infer.InferConfig(burn_in=1, samples=1, top_k=4)
+
+    def _round(cfg: EngineConfig, docs):
+        eng = LDAServeEngine(HotSwapModel(snap), cfg)
+        try:
+            eng.infer_many(docs, timeout=60.0)
+        finally:
+            eng.stop()
+
+    def run():
+        base = dict(max_delay_ms=100.0, length_buckets=(8, 16), infer=icfg)
+        # full batch -> bucket (4, 8)
+        _round(EngineConfig(max_batch=4, **base),
+               [np.arange(5, dtype=np.int64) % V for _ in range(4)])
+        # single long doc -> bucket (1, 16)
+        _round(EngineConfig(max_batch=1, **base),
+               [np.arange(12, dtype=np.int64) % V])
+        # injected OOM (initial try + 1 retry both fail) -> the fallback
+        # splits the 4-doc batch into two (2, 8)-bucket halves
+        _round(EngineConfig(max_batch=4, oom_backoff_ms=0.5,
+                            fault_plan=FaultPlan.parse("device_oom@0x2"),
+                            **base),
+               [np.arange(6, dtype=np.int64) % V for _ in range(4)])
+
+    return JitAudit(
+        name="serve.engine[bucket matrix + oom fallback]",
+        path="src/repro/serve/engine.py",
+        cache_size=infer.serve_cache_size, run=run,
+        max_compiles=3)   # shapes (4,8), (1,16), (2,8)
+
+
 def run(root: Path) -> list[Finding]:
     findings = []
     for build in (_serve_buffer_audit, _serve_sharded_audit,
-                  _train_sweep_audit, _train_sharded_sweep_audit):
+                  _serve_engine_audit, _train_sweep_audit,
+                  _train_sharded_sweep_audit):
         findings += audit_one(build())
     return findings

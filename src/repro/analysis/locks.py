@@ -1,9 +1,9 @@
 """lock-discipline: AST race detector for the serving engine.
 
 For each class in the target modules, infer which attributes are lock
-instances (``self.x = threading.Lock()/RLock()``), then which attributes
-are *guarded* — assigned inside a ``with self.<lock>:`` block in any
-non-``__init__`` method.  Every access to a guarded attribute outside a
+instances (``self.x = threading.Lock()/RLock()/Condition()``), then which
+attributes are *guarded* — assigned inside a ``with self.<lock>:`` block in
+any non-``__init__`` method.  Every access to a guarded attribute outside a
 with-lock context is flagged:
 
 - **LD001** — write outside the lock (lost-update race)
@@ -22,8 +22,19 @@ from pathlib import Path
 from .report import Finding
 
 CHECKER = "lock-discipline"
-TARGETS = ("src/repro/serve/engine.py",)
-LOCK_TYPES = frozenset({"Lock", "RLock"})
+# The continuous-batching engine's Condition-guarded scheduler state
+# (pending deque, deadline heap, worker liveness flags), the fault plan's
+# per-site counters, the hot-swap double buffer, and the metric families
+# the admission counters live in.
+TARGETS = (
+    "src/repro/serve/engine.py",
+    "src/repro/serve/faults.py",
+    "src/repro/serve/snapshot.py",
+    "src/repro/obs/metrics.py",
+)
+# threading.Condition guards like a lock (acquire/release delegate to the
+# underlying lock); with-blocks on it are locked regions
+LOCK_TYPES = frozenset({"Lock", "RLock", "Condition"})
 
 
 def _callee_tail(call: ast.Call) -> str | None:

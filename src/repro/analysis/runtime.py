@@ -29,15 +29,23 @@ class LockNotHeldError(AssertionError):
 
 
 def assert_lock_held(lock) -> None:
-    """Raise LockNotHeldError if ``lock`` is not currently held (by anyone).
+    """Raise LockNotHeldError if ``lock`` is not currently held.
 
-    Probe: a non-blocking acquire succeeding means the lock was free — the
-    caller reached a guarded section without holding it.  Works for both
-    Lock and RLock; for RLock held by the CURRENT thread the acquire
-    succeeds too, so this asserts "some thread holds it", which is the
-    property the engine's plain Lock sections need.  No-op when the
-    sanitizer is disabled."""
+    For Condition / RLock (anything exposing ``_is_owned``) the ownership
+    check is exact and per-thread: the CURRENT thread must hold it.  The
+    acquire-probe fallback below would be wrong there — a re-entrant
+    non-blocking acquire *succeeds* for the owning thread, reading "held
+    by me" as "free".  For a plain Lock there is no owner API, so the
+    probe asserts the weaker "some thread holds it": a non-blocking
+    acquire succeeding means the caller reached a guarded section with
+    the lock free.  No-op when the sanitizer is disabled."""
     if not _LOCK_SANITIZER:
+        return
+    is_owned = getattr(lock, "_is_owned", None)
+    if is_owned is not None:
+        if not is_owned():
+            raise LockNotHeldError(
+                "guarded section entered without holding its lock")
         return
     if lock.acquire(blocking=False):
         lock.release()

@@ -13,12 +13,21 @@ missing, serves a request storm, hot-swaps a fresher snapshot mid-flight):
 HTTP JSON endpoint (stdlib only):
 
     PYTHONPATH=src python -m repro.launch.serve_lda --snapshot /tmp/lda.npz --port 8080
-    POST /infer  {"tokens": [3, 17, ...]}            -> theta + top topics
+    POST /infer  {"tokens": [3, 17, ...], "deadline_ms": 250}
+                 -> theta + top topics; 429 + structured reason when
+                    admission control rejects (full queue, blown deadline)
     POST /swap   {"snapshot": "/path/to/newer.npz"}  -> hot-swap, no restart
     GET  /metrics    -> Prometheus text exposition (repro.obs registry)
     GET  /stats      -> engine stats + queue depth, jit cache, device memory
     GET  /trace      -> Chrome trace JSON of the serving phase spans
-    GET  /healthz
+    GET  /healthz    -> 200 when ready; 503 (with reasons) when stopped,
+                        saturated, or a worker thread is dead
+
+Robustness knobs: ``--max-queue`` bounds the admission queue,
+``--admission`` picks the overload policy (block/reject/shed_oldest),
+``--deadline-ms`` sets the default per-request deadline, and
+``--fault-plan`` injects deterministic faults (chaos testing — see
+repro.serve.faults for the spec grammar).
 
 ``--trace-out`` / ``--metrics-out`` additionally write the trace JSON and a
 final metrics dump at shutdown (bench mode: after the storm).
@@ -44,6 +53,25 @@ def build_argparser() -> argparse.ArgumentParser:
     ap.add_argument("--delay-ms", type=float, default=3.0)
     ap.add_argument("--length-buckets", type=int, nargs="+",
                     default=[32, 64, 128, 256])
+    # robustness knobs
+    ap.add_argument("--max-queue", type=int, default=256,
+                    help="bounded admission queue depth (0 = unbounded)")
+    ap.add_argument("--admission", choices=("block", "reject", "shed_oldest"),
+                    default="block",
+                    help="policy when the queue is full: backpressure the "
+                         "submitter, 429 the request, or shed the oldest "
+                         "queued request to admit the new one")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="default per-request deadline; expired requests "
+                         "are dropped before device time is spent on them "
+                         "(requests may override via the /infer payload)")
+    ap.add_argument("--fault-plan", default=None, metavar="SPEC",
+                    help="deterministic fault injection: JSON list or "
+                         "compact 'kind[@at][xcount][:delay_s]' items, e.g. "
+                         "'device_oom@1,worker_exception@0x3' "
+                         "(see repro.serve.faults)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for rate-based fault specs")
     ap.add_argument("--burn-in", type=int, default=8)
     ap.add_argument("--samples", type=int, default=4)
     ap.add_argument("--top-k", type=int, default=8)
@@ -89,17 +117,29 @@ def build_argparser() -> argparse.ArgumentParser:
     return ap
 
 
-def load_model(args, path: str | None = None):
+def make_fault_plan(args):
+    """One FaultPlan per process (shared by the loader, the hot-swap model
+    and the engine, so per-site event counters stay globally consistent)."""
+    spec = getattr(args, "fault_plan", None)
+    if not spec:
+        return None
+    from repro.serve import FaultPlan
+
+    return FaultPlan.parse(spec, seed=getattr(args, "fault_seed", 0))
+
+
+def load_model(args, path: str | None = None, fault_plan=None):
     """Load the snapshot honoring --shards: dense files are re-split into
     word shards at load time, ``.sharded`` directories keep their layout."""
     from repro.serve import load_any_snapshot
 
     return load_any_snapshot(path or args.snapshot,
                              shards=max(args.shards, 0),
-                             comm=None if args.comm == "auto" else args.comm)
+                             comm=None if args.comm == "auto" else args.comm,
+                             fault_plan=fault_plan)
 
 
-def make_engine(args, snap):
+def make_engine(args, snap, fault_plan=None):
     from repro.obs import Observability
     from repro.serve import EngineConfig, HotSwapModel, InferConfig, LDAServeEngine
 
@@ -107,12 +147,18 @@ def make_engine(args, snap):
     if sanitize:
         from repro.analysis.runtime import enable_debug_nans
         enable_debug_nans()
-    model = HotSwapModel(snap)
+    if fault_plan is None:
+        fault_plan = make_fault_plan(args)
+    model = HotSwapModel(snap, fault_plan=fault_plan)
     cfg = EngineConfig(
         max_batch=args.max_batch, max_delay_ms=args.delay_ms,
         length_buckets=tuple(args.length_buckets),
         infer=InferConfig(burn_in=args.burn_in, samples=args.samples,
                           top_k=args.top_k, impl=args.impl, comm=args.comm),
+        max_queue=getattr(args, "max_queue", 256),
+        admission=getattr(args, "admission", "block"),
+        default_deadline_ms=getattr(args, "deadline_ms", None),
+        fault_plan=fault_plan,
         sanitize=sanitize)
     obs = Observability.default(trace=not getattr(args, "no_trace", False))
     return model, LDAServeEngine(model, cfg, seed=args.seed, obs=obs)
@@ -267,7 +313,11 @@ def make_http_server(args, model, engine):
 
         def do_GET(self):
             if self.path == "/healthz":
-                self._reply(200, {"ok": True, "model_version": model.version})
+                health = engine.ready()
+                code = 200 if health["ready"] else 503
+                self._reply(code, {"ok": health["ready"],
+                                   "model_version": model.version,
+                                   **health})
             elif self.path == "/stats":
                 self._reply(200, enriched_stats(model, engine))
             elif self.path == "/metrics":
@@ -287,11 +337,21 @@ def make_http_server(args, model, engine):
             except json.JSONDecodeError:
                 return self._reply(400, {"error": "bad json"})
             if self.path == "/infer":
+                from repro.serve import RejectedError
+
                 toks = payload.get("tokens")
                 if not isinstance(toks, list) or not toks:
                     return self._reply(400, {"error": "tokens: [word ids]"})
+                deadline = payload.get("deadline_ms")
                 try:
-                    res = engine.infer(toks)
+                    res = engine.infer(toks, deadline_ms=deadline)
+                except RejectedError as e:
+                    # admission control said no — structured 429 so clients
+                    # can back off / retry against another replica
+                    return self._reply(429, {
+                        "error": str(e), "reason": e.reason,
+                        "queue_depth": e.queue_depth,
+                        "max_queue": e.max_queue})
                 except (ValueError, TypeError) as e:
                     return self._reply(400, {"error": str(e)})
                 except (RuntimeError, TimeoutError) as e:
@@ -305,11 +365,19 @@ def make_http_server(args, model, engine):
                     "latency_ms": res["latency_ms"],
                 })
             if self.path == "/swap":
+                from repro.serve import PublishError, SnapshotIntegrityError
+
                 path = payload.get("snapshot")
                 if not path or not os.path.exists(path):
                     return self._reply(400, {"error": "snapshot path missing"})
                 try:
                     v = model.publish(load_model(args, path))
+                except (PublishError, SnapshotIntegrityError) as e:
+                    # failed publish rolled back: still serving the last
+                    # good snapshot — transient server-side condition
+                    return self._reply(503, {
+                        "error": str(e), "rolled_back": True,
+                        "model_version": model.version})
                 except Exception as e:  # corrupt / non-snapshot file
                     return self._reply(400, {"error": f"bad snapshot: {e}"})
                 return self._reply(200, {"model_version": v})
@@ -319,8 +387,9 @@ def make_http_server(args, model, engine):
 
 
 def run_http(args) -> int:
-    snap = load_model(args)
-    model, engine = make_engine(args, snap)
+    fault_plan = make_fault_plan(args)
+    snap = load_model(args, fault_plan=fault_plan)
+    model, engine = make_engine(args, snap, fault_plan=fault_plan)
     httpd = make_http_server(args, model, engine)
     print(f"[serve] V={snap.num_words} K={snap.num_topics} on "
           f"http://{args.host}:{httpd.server_address[1]}")

@@ -166,18 +166,23 @@ class Histogram:
 
     def __init__(self, name: str, help: str,
                  buckets: Sequence[float] = LATENCY_BUCKETS_MS,
-                 window: int = 4096):
+                 window: int = 4096, labelnames: Sequence[str] = ()):
         self.name, self.help = name, help
         self.buckets = tuple(sorted(float(b) for b in buckets))
         if not self.buckets:
             raise ValueError("need at least one bucket bound")
+        self.labelnames = tuple(labelnames)
+        self._maxwin = int(window)
         self._lock = threading.Lock()
         self._counts = [0] * (len(self.buckets) + 1)  # +1 = +Inf
         self._sum = 0.0
         self._count = 0
         self._window: collections.deque = collections.deque(maxlen=window)
+        self._children: dict[tuple, Histogram] = {}
 
     def observe(self, v: float) -> None:
+        if self.labelnames:
+            raise ValueError(f"{self.name} is labelled; use .labels(...)")
         v = float(v)
         # bisect by hand: bucket vectors are short and this avoids an import
         i = 0
@@ -191,26 +196,66 @@ class Histogram:
             self._count += 1
             self._window.append(v)
 
+    def labels(self, **kv) -> "Histogram":
+        if tuple(sorted(kv)) != tuple(sorted(self.labelnames)):
+            raise ValueError(f"{self.name} labels are {self.labelnames}")
+        key = tuple(str(kv[k]) for k in self.labelnames)
+        with self._lock:
+            child = self._children.get(key)
+            if child is None:
+                child = Histogram(self.name, self.help, buckets=self.buckets,
+                                  window=self._maxwin)
+                self._children[key] = child
+        return child
+
+    def _child_list(self) -> list["Histogram"]:
+        with self._lock:
+            return list(self._children.values())
+
     @property
     def count(self) -> int:
+        if self.labelnames:
+            return sum(c.count for c in self._child_list())
         with self._lock:
             return self._count
 
     @property
     def sum(self) -> float:
+        if self.labelnames:
+            return sum(c.sum for c in self._child_list())
         with self._lock:
             return self._sum
 
     @property
     def mean(self) -> float:
+        if self.labelnames:
+            n = self.count
+            return self.sum / n if n else 0.0
         with self._lock:
             return self._sum / self._count if self._count else 0.0
 
-    def percentile(self, q: float) -> float:
-        """Exact percentile over the bounded recent window (numpy method)."""
+    def per_label(self) -> dict[str, dict]:
+        """Per-child summaries keyed by comma-joined label values."""
         with self._lock:
-            win = np.asarray(self._window, np.float64)
+            children = dict(self._children)
+        return {",".join(k): dict(count=c.count, mean=c.mean,
+                                  p50=c.percentile(50), p99=c.percentile(99))
+                for k, c in children.items()}
+
+    def percentile(self, q: float) -> float:
+        """Exact percentile over the bounded recent window (numpy method).
+        For a labelled family: over the union of the children's windows."""
+        if self.labelnames:
+            wins = [c._window_values() for c in self._child_list()]
+            win = np.asarray([v for w in wins for v in w], np.float64)
+        else:
+            with self._lock:
+                win = np.asarray(self._window, np.float64)
         return float(np.percentile(win, q)) if win.size else 0.0
+
+    def _window_values(self) -> list[float]:
+        with self._lock:
+            return list(self._window)
 
     def quantile_est(self, q: float) -> float:
         """Prometheus-style estimate from the fixed buckets (linear
@@ -233,16 +278,31 @@ class Histogram:
         return self.buckets[-1]
 
     def sample_lines(self) -> list[str]:
+        if self.labelnames:
+            with self._lock:
+                children = sorted(self._children.items())
+            out = []
+            for key, child in children:
+                inner = ",".join(
+                    f'{n}="{_escape_label(v)}"'
+                    for n, v in zip(self.labelnames, key))
+                out.extend(child._labelled_lines(inner))
+            return out
+        return self._labelled_lines("")
+
+    def _labelled_lines(self, inner: str) -> list[str]:
         with self._lock:
             counts = list(self._counts)
             total, s = self._count, self._sum
+        pre = (inner + ",") if inner else ""
+        suffix = ("{" + inner + "}") if inner else ""
         out, cum = [], 0
         for b, c in zip(self.buckets, counts):
             cum += c
-            out.append(f'{self.name}_bucket{{le="{_fmt(b)}"}} {cum}')
-        out.append(f'{self.name}_bucket{{le="+Inf"}} {total}')
-        out.append(f"{self.name}_sum {_fmt(s)}")
-        out.append(f"{self.name}_count {total}")
+            out.append(f'{self.name}_bucket{{{pre}le="{_fmt(b)}"}} {cum}')
+        out.append(f'{self.name}_bucket{{{pre}le="+Inf"}} {total}')
+        out.append(f"{self.name}_sum{suffix} {_fmt(s)}")
+        out.append(f"{self.name}_count{suffix} {total}")
         return out
 
 
@@ -307,9 +367,10 @@ class MetricsRegistry:
 
     def histogram(self, name: str, help: str = "",
                   buckets: Sequence[float] = LATENCY_BUCKETS_MS,
-                  window: int = 4096) -> Histogram:
+                  window: int = 4096,
+                  labelnames: Sequence[str] = ()) -> Histogram:
         return self._get(Histogram, name, help, buckets=buckets,
-                         window=window)
+                         window=window, labelnames=labelnames)
 
     def names(self) -> list[str]:
         with self._lock:
@@ -331,7 +392,9 @@ class MetricsRegistry:
             metrics = list(self._metrics.values())
         out: dict = {}
         for m in metrics:
-            if isinstance(m, Histogram):
+            if isinstance(m, Histogram) and m.labelnames:
+                out[m.name] = m.per_label()
+            elif isinstance(m, Histogram):
                 out[m.name] = dict(count=m.count, sum=m.sum, mean=m.mean,
                                    p50=m.percentile(50), p99=m.percentile(99))
             elif isinstance(m, Counter) and m.labelnames:
@@ -383,12 +446,19 @@ class NoopGauge:
 
 class NoopHistogram:
     kind = "histogram"
+    labelnames: tuple = ()
     count = 0
     sum = 0.0
     mean = 0.0
 
     def observe(self, v: float) -> None:
         pass
+
+    def labels(self, **kv) -> "NoopHistogram":
+        return self
+
+    def per_label(self) -> dict:
+        return {}
 
     def percentile(self, q: float) -> float:
         return 0.0
@@ -422,7 +492,7 @@ class NoopRegistry:
         return self._GAUGE
 
     def histogram(self, name, help="", buckets=LATENCY_BUCKETS_MS,
-                  window=4096):
+                  window=4096, labelnames=()):
         return self._HISTOGRAM
 
     def names(self) -> list[str]:

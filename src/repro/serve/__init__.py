@@ -11,25 +11,34 @@ Layers (each usable on its own):
   jitted over (B, L) token batches, reusing the training sampler's S/Q split
   and two-level blocked search; for sharded models the per-token phi gather
   runs under ``shard_map`` on the shard owning each word id.
-* ``engine``   — micro-batching request engine: queue, shape bucketing,
-  batch-timeout flush, one H2D transfer per batch, p50/p99 latency counters.
+* ``engine``   — continuous-batching request engine: bounded admission
+  queue (block/reject/shed policies), per-request deadlines + cancellation,
+  SLO-aware flush, shape bucketing, one H2D transfer per batch, worker
+  supervision, p50/p99 latency counters.
+* ``faults``   — deterministic, seedable fault injection (chaos harness)
+  wired through ``EngineConfig(fault_plan=)``.
 * ``eval``     — held-out perplexity via the document-completion protocol.
 """
-from repro.serve.engine import EngineConfig, LDAServeEngine
+from repro.serve.engine import EngineConfig, LDAServeEngine, RejectedError
 from repro.serve.eval import PerplexityResult, heldout_perplexity
+from repro.serve.faults import FaultPlan, FaultSpec, InjectedFault
 from repro.serve.infer import (FoldInResult, InferConfig, fold_in,
                                fold_in_config, pack_docs)
-from repro.serve.snapshot import (HotSwapModel, ModelSnapshot,
+from repro.serve.snapshot import (HotSwapModel, ModelSnapshot, PublishError,
                                   ShardedModelSnapshot,
+                                  SnapshotIntegrityError,
                                   assemble_sharded_snapshot, load_any_snapshot,
                                   load_sharded_snapshot, load_snapshot,
                                   save_sharded_snapshot, save_snapshot,
                                   shard_snapshot, snapshot_from_state)
 
 __all__ = [
-    "EngineConfig", "LDAServeEngine", "PerplexityResult", "heldout_perplexity",
+    "EngineConfig", "LDAServeEngine", "RejectedError",
+    "PerplexityResult", "heldout_perplexity",
+    "FaultPlan", "FaultSpec", "InjectedFault",
     "FoldInResult", "InferConfig", "fold_in", "fold_in_config", "pack_docs",
-    "HotSwapModel", "ModelSnapshot", "ShardedModelSnapshot",
+    "HotSwapModel", "ModelSnapshot", "PublishError", "ShardedModelSnapshot",
+    "SnapshotIntegrityError",
     "assemble_sharded_snapshot", "load_any_snapshot", "load_sharded_snapshot",
     "load_snapshot", "save_sharded_snapshot", "save_snapshot",
     "shard_snapshot", "snapshot_from_state",

@@ -593,6 +593,17 @@ def serve_cache_size() -> int:
             + sum(f._cache_size() for f in _SHARDED_JITS))
 
 
+def fold_in_cost(batch: int, length: int, cfg: InferConfig) -> float:
+    """Relative execution-cost model of one fold-in batch: token-sweeps
+    dominate, so cost ~ B * L * total sweeps (burn-in + samples + init).
+
+    Dimensionless on purpose — the engine's SLO scheduler uses cost
+    *ratios* to transfer a measured per-bucket execution time onto buckets
+    it has not timed yet (never to predict absolute milliseconds)."""
+    return float(max(batch, 1) * max(length, 1)
+                 * (cfg.burn_in + cfg.samples + 1))
+
+
 def fold_in_config(snapshot, tokens, mask, key, cfg: InferConfig) -> FoldInResult:
     """Convenience wrapper: run fold-in from a (dense or sharded) snapshot
     + InferConfig."""

@@ -32,17 +32,21 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import io
 import json
 import os
 import shutil
 import tempfile
 import threading
 import time
+import zlib
 from typing import Any, Sequence
 
 import numpy as np
 import jax
 import jax.numpy as jnp
+
+from repro.serve.faults import FaultPlan
 
 Array = jnp.ndarray
 
@@ -50,6 +54,16 @@ _FORMAT_VERSION = 1
 SHARDED_SUFFIX = ".sharded"
 _MANIFEST = "manifest.json"
 _MAPS = "maps.npz"
+
+
+class SnapshotIntegrityError(RuntimeError):
+    """A sharded snapshot file failed its integrity check (corrupt or
+    truncated shard) — raised instead of serving garbage phi rows."""
+
+
+class PublishError(RuntimeError):
+    """A hot-swap publish failed before the flip: the active snapshot is
+    untouched (rollback is implicit in the double-buffered design)."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -333,6 +347,20 @@ def write_sharded_snapshot(path: str, blocks, phi_sum, shard_of, local_id, *,
 
     tmp = tempfile.mkdtemp(dir=parent, suffix=".tmp")
     try:
+        maps = dict(word_shard_of=np.asarray(shard_of, np.int32),
+                    word_local_id=np.asarray(local_id, np.int32),
+                    phi_sum=np.asarray(phi_sum, np.int32))
+        if vocab is not None:
+            maps["vocab"] = np.asarray(vocab, dtype=np.str_)
+        _put(_MAPS, lambda f: np.savez_compressed(f, **maps))
+        crcs = {}
+        for s, blk in enumerate(blocks):
+            name = f"shard_{s:04d}.npz"
+            _put(name, lambda f, b=blk: np.savez_compressed(f, phi_vk=b))
+            with open(os.path.join(tmp, name), "rb") as f:
+                crcs[name] = zlib.crc32(f.read())
+        # manifest written last (after the shard crc32s it records), still
+        # inside the staged tmp dir — is_sharded_snapshot_path keys on it
         manifest = {
             "version": _FORMAT_VERSION,
             "num_shards": len(blocks),
@@ -342,18 +370,10 @@ def write_sharded_snapshot(path: str, blocks, phi_sum, shard_of, local_id, *,
             "alpha": float(alpha),
             "beta": float(beta),
             "comm": str(comm),
+            "crc32": crcs,
             "meta": dict(meta or {}),
         }
         _put(_MANIFEST, lambda f: f.write(json.dumps(manifest).encode()))
-        maps = dict(word_shard_of=np.asarray(shard_of, np.int32),
-                    word_local_id=np.asarray(local_id, np.int32),
-                    phi_sum=np.asarray(phi_sum, np.int32))
-        if vocab is not None:
-            maps["vocab"] = np.asarray(vocab, dtype=np.str_)
-        _put(_MAPS, lambda f: np.savez_compressed(f, **maps))
-        for s, blk in enumerate(blocks):
-            _put(f"shard_{s:04d}.npz",
-                 lambda f, b=blk: np.savez_compressed(f, phi_vk=b))
         # Overwrite without a window where no complete copy exists: move
         # the old directory aside first (a crash here leaves the previous
         # snapshot recoverable at .stale + the complete staged tmp), then
@@ -399,27 +419,50 @@ def is_sharded_snapshot_path(path: str) -> bool:
     return os.path.isdir(path) and os.path.exists(os.path.join(path, _MANIFEST))
 
 
-def _read_sharded(path: str):
-    """Host-side read of the sharded layout -> (blocks, maps, manifest)."""
+def _read_sharded(path: str, fault_plan: FaultPlan | None = None):
+    """Host-side read of the sharded layout -> (blocks, maps, manifest).
+
+    Each shard file is crc32-verified against the manifest (when recorded):
+    a corrupt or truncated shard raises :class:`SnapshotIntegrityError`
+    instead of silently serving garbage phi rows.  ``fault_plan`` injects
+    ``shard_load_error`` events here (one site poll per shard file):
+    ``delay_s``-only specs make the read *slow*, others make it fail."""
     with open(os.path.join(path, _MANIFEST)) as f:
         manifest = json.load(f)
     with np.load(os.path.join(path, _MAPS), allow_pickle=False) as d:
         maps = {k: d[k] for k in d.files}
+    crcs = manifest.get("crc32", {})
     blocks = []
     for s in range(int(manifest["num_shards"])):
-        with np.load(os.path.join(path, f"shard_{s:04d}.npz"),
-                     allow_pickle=False) as d:
+        name = f"shard_{s:04d}.npz"
+        fp = os.path.join(path, name)
+        if fault_plan is not None:
+            spec = fault_plan.check("shard_load_error")
+            if spec is not None:
+                if spec.delay_s > 0:
+                    time.sleep(spec.delay_s)
+                else:
+                    raise SnapshotIntegrityError(
+                        f"injected corrupt shard read: {name}")
+        with open(fp, "rb") as f:
+            raw = f.read()
+        if name in crcs and zlib.crc32(raw) != crcs[name]:
+            raise SnapshotIntegrityError(
+                f"crc32 mismatch for {name}: snapshot shard is corrupt or "
+                f"truncated (expected {crcs[name]})")
+        with np.load(io.BytesIO(raw), allow_pickle=False) as d:
             blocks.append(d["phi_vk"])
     return blocks, maps, manifest
 
 
-def load_sharded_snapshot(path: str, mesh=None,
-                          comm: str | None = None) -> ShardedModelSnapshot:
+def load_sharded_snapshot(path: str, mesh=None, comm: str | None = None,
+                          fault_plan: FaultPlan | None = None,
+                          ) -> ShardedModelSnapshot:
     """Load a sharded snapshot with each phi block on its own mesh device.
 
     ``comm`` overrides the snapshot's published gather strategy (else the
     manifest's ``comm`` entry, else ``"psum"``)."""
-    blocks, maps, manifest = _read_sharded(path)
+    blocks, maps, manifest = _read_sharded(path, fault_plan=fault_plan)
     vocab = ([str(w) for w in maps["vocab"]] if "vocab" in maps else None)
     return _sharded_from_blocks(
         np.stack(blocks), maps["phi_sum"], maps["word_shard_of"],
@@ -445,13 +488,15 @@ def assemble_sharded_snapshot(path: str) -> ModelSnapshot:
 
 
 def load_any_snapshot(path: str, mesh=None, shards: int | None = None,
-                      comm: str | None = None):
+                      comm: str | None = None,
+                      fault_plan: FaultPlan | None = None):
     """Dispatch on layout: ``.sharded`` directories load mesh-sharded, dense
     ``.npz`` files load single-device; ``shards > 1`` re-shards a dense
     snapshot at load time (serve_lda --shards).  ``comm`` tags the loaded
     sharded snapshot's gather strategy (serve_lda --comm)."""
     if is_sharded_snapshot_path(path):
-        return load_sharded_snapshot(path, mesh, comm=comm)
+        return load_sharded_snapshot(path, mesh, comm=comm,
+                                     fault_plan=fault_plan)
     snap = load_snapshot(path)
     if shards and shards > 1:
         return shard_snapshot(snap, shards, mesh, comm=comm or "psum")
@@ -467,24 +512,46 @@ class HotSwapModel:
     happens before the flip, so the critical section is a pointer swap.
     """
 
-    def __init__(self, snap: ModelSnapshot | ShardedModelSnapshot):
+    def __init__(self, snap: ModelSnapshot | ShardedModelSnapshot,
+                 fault_plan: FaultPlan | None = None):
         self._buffers: list[ModelSnapshot | ShardedModelSnapshot | None] = [
             snap, None]
         self._active = 0
         self._version = 1
+        self._publish_failures = 0
+        self._fault_plan = fault_plan
         self._lock = threading.Lock()
 
     @property
     def version(self) -> int:
-        return self._version
+        with self._lock:
+            return self._version
+
+    @property
+    def publish_failures(self) -> int:
+        with self._lock:
+            return self._publish_failures
 
     def acquire(self) -> tuple[int, ModelSnapshot | ShardedModelSnapshot]:
         with self._lock:
             return self._version, self._buffers[self._active]
 
     def publish(self, snap: ModelSnapshot | ShardedModelSnapshot) -> int:
-        """Stage into the inactive buffer, then flip.  Returns new version."""
+        """Stage into the inactive buffer, then flip.  Returns new version.
+
+        Rollback on failure is structural: anything that goes wrong before
+        the flip (an injected ``publish_failure``, a staging error) raises
+        :class:`PublishError` and leaves the active buffer — the last good
+        snapshot — untouched.  Readers never observe a partial publish."""
         staged = snap  # arrays already device-resident (constructor/load)
+        if self._fault_plan is not None:
+            fault = self._fault_plan.check("publish_failure")
+            if fault is not None:
+                with self._lock:
+                    self._publish_failures += 1
+                raise PublishError(
+                    "injected publish failure before flip; active snapshot "
+                    "rolled back (unchanged)")
         with self._lock:
             inactive = 1 - self._active
             self._buffers[inactive] = staged

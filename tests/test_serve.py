@@ -264,7 +264,9 @@ class TestEngineLifecycleAndAccounting:
         eng = self._engine(planted_snapshot)
         eng.stop()
         req = _Request(np.arange(8, dtype=np.int32))
-        eng._queue.put(req)          # simulate a submit/stop race
+        with eng._cond:              # simulate a submit/stop race
+            eng._pending.append(req)
+            req.queued = True
         eng.stop()                   # idempotent; drains + fails pending
         assert req.event.is_set()
         assert "error" in req.result
@@ -331,7 +333,7 @@ class TestEngineObservability:
             EngineConfig(max_batch=4, max_delay_ms=kw.pop("delay_ms", 150.0),
                          length_buckets=(32, 64),
                          infer=InferConfig(burn_in=3, samples=2),
-                         rate_window_s=rate_window_s))
+                         rate_window_s=rate_window_s, **kw))
 
     def test_window_rate_survives_idle_gap(self, planted_snapshot):
         """Pre-fix, the only throughput number was lifetime-span docs/sec:
@@ -359,19 +361,20 @@ class TestEngineObservability:
         eng = self._engine(planted_snapshot)
         eng.stop()
         req = _Request(np.arange(8, dtype=np.int32))
-        eng._queue.put(req)
+        with eng._cond:
+            eng._pending.append(req)
+            req.queued = True
         eng.stop()                       # drains + fails pending
         s = eng.stats()
         assert s["errors"] == 1
         assert s["errors_by_reason"] == {"shutdown": 1}
 
     def test_worker_exception_labels_errors(self, planted_snapshot):
-        def boom(batch):
-            raise ValueError("injected fault")
+        from repro.serve.faults import FaultPlan
 
-        eng = self._engine(planted_snapshot, delay_ms=20.0)
+        eng = self._engine(planted_snapshot, delay_ms=20.0,
+                           fault_plan=FaultPlan.parse("worker_exception@0"))
         try:
-            eng._serve_batch = boom
             with pytest.raises(RuntimeError, match="injected fault"):
                 eng.infer(np.arange(8, dtype=np.int32))
             s = eng.stats()

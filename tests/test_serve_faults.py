@@ -1,0 +1,577 @@
+"""Chaos suite for the continuous-batching engine (ISSUE 10).
+
+Every fault kind x every admission policy must leave the engine live and
+every request settled (no deadlocks, no hung callers), with reason-labelled
+accounting.  Plus the per-feature regressions: cancelled/timed-out requests
+never cost a device batch, deadline expiry beats dispatch, the OOM ladder
+degrades to smaller buckets, worker supervision restarts then declares
+dead, publish failures roll back, and corrupt shard files fail loudly.
+"""
+import json
+import threading
+import time
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.serve import (EngineConfig, HotSwapModel, InferConfig,
+                         LDAServeEngine, ModelSnapshot, PublishError,
+                         RejectedError, SnapshotIntegrityError)
+from repro.serve.engine import ADMISSION_POLICIES
+from repro.serve.faults import (KINDS, FaultPlan, FaultSpec, InjectedFault,
+                                SimulatedOOM, WorkerCrash)
+
+K, V, WORDS_PER_TOPIC = 6, 48, 8
+
+
+@pytest.fixture(scope="module")
+def snap():
+    import jax.numpy as jnp
+
+    phi = np.zeros((V, K), np.int32)
+    for k in range(K):
+        phi[k * WORDS_PER_TOPIC:(k + 1) * WORDS_PER_TOPIC, k] = 200
+    return ModelSnapshot(phi_vk=jnp.asarray(phi),
+                         phi_sum=jnp.asarray(phi.sum(0)),
+                         alpha=0.1, beta=0.01, num_words_total=V)
+
+
+def _doc(i: int, n: int = 10) -> np.ndarray:
+    return ((np.arange(n) * 3 + i) % V).astype(np.int32)
+
+
+def _engine(snap, **kw):
+    """Tiny fast engine: one length bucket (16) so every test in this file
+    shares the same compiled fold-in variants."""
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_delay_ms", 10.0)
+    kw.setdefault("length_buckets", (16,))
+    kw.setdefault("infer", InferConfig(burn_in=1, samples=1, top_k=3))
+    return LDAServeEngine(HotSwapModel(snap), EngineConfig(**kw))
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan semantics (no engine involved)
+# ---------------------------------------------------------------------------
+class TestFaultPlan:
+    def test_parse_compact_grammar(self):
+        plan = FaultPlan.parse(
+            "device_oom@1x2, worker_exception, slow_batch@3:0.25")
+        kinds = [(s.kind, s.at, s.count, s.delay_s) for s in plan.specs]
+        assert kinds == [("device_oom", 1, 2, 0.0),
+                         ("worker_exception", 0, 1, 0.0),
+                         ("slow_batch", 3, 1, 0.25)]
+
+    def test_parse_json(self):
+        plan = FaultPlan.parse(
+            json.dumps([{"kind": "publish_failure", "at": 2, "every": 3}]))
+        (s,) = plan.specs
+        assert (s.kind, s.at, s.every) == ("publish_failure", 2, 3)
+
+    def test_unknown_kind_rejected(self):
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            FaultPlan.parse("segfault@0")
+        with pytest.raises(ValueError, match="unknown fault site"):
+            FaultPlan().check("segfault")
+
+    def test_fires_on_scheduled_indices_only(self):
+        plan = FaultPlan([FaultSpec("device_oom", at=1, count=2)])
+        fired = [plan.check("device_oom") is not None for _ in range(5)]
+        assert fired == [False, True, True, False, False]
+        assert plan.fired() == {"device_oom": 2}
+
+    def test_every_n_is_periodic(self):
+        plan = FaultPlan([FaultSpec("worker_exception", at=1, every=3)])
+        fired = [plan.check("worker_exception") is not None for _ in range(8)]
+        assert fired == [False, True, False, False, True, False, False, True]
+
+    def test_rate_schedule_is_replayable(self):
+        a = FaultPlan([FaultSpec("device_oom", rate=0.5)], seed=7)
+        b = FaultPlan([FaultSpec("device_oom", rate=0.5)], seed=7)
+        seq = [a.check("device_oom") is not None for _ in range(32)]
+        assert seq == [b.check("device_oom") is not None for _ in range(32)]
+        assert any(seq) and not all(seq)   # actually probabilistic
+
+    def test_fire_raises_canonical_exceptions(self):
+        plan = FaultPlan.parse("worker_crash, device_oom, worker_exception,"
+                               "slow_batch:0.01")
+        with pytest.raises(WorkerCrash):
+            plan.fire("worker_crash")
+        with pytest.raises(SimulatedOOM):
+            plan.fire("device_oom")
+        with pytest.raises(InjectedFault):
+            plan.fire("worker_exception")
+        spec = plan.fire("slow_batch")     # returned for the caller to sleep
+        assert spec is not None and spec.delay_s == 0.01
+
+    def test_sites_are_independent_counters(self):
+        plan = FaultPlan.parse("device_oom@0")
+        assert plan.check("worker_exception") is None   # other site: no fire
+        assert plan.check("device_oom") is not None
+
+
+# ---------------------------------------------------------------------------
+# The chaos matrix: every fault kind x every admission policy.
+# ---------------------------------------------------------------------------
+_MATRIX_PLANS = {
+    "worker_exception": "worker_exception@1x2",
+    "worker_crash": "worker_crash@1",
+    "device_oom": "device_oom@1x2",
+    "slow_batch": "slow_batch@1x2:0.05",
+}
+
+
+class TestChaosMatrix:
+    @pytest.mark.parametrize("policy", ADMISSION_POLICIES)
+    @pytest.mark.parametrize("kind", sorted(_MATRIX_PLANS))
+    def test_no_hangs_under_fault(self, snap, kind, policy):
+        """10-doc burst against an injected fault: every submitted request
+        settles (no deadlocks), the fault demonstrably fired, failures are
+        reason-labelled, and the engine still serves afterwards."""
+        plan = FaultPlan.parse(_MATRIX_PLANS[kind])
+        eng = _engine(snap, max_batch=2, max_queue=8, admission=policy,
+                      oom_retries=1, oom_backoff_ms=0.5, fault_plan=plan)
+        reqs, rejected = [], 0
+        try:
+            for i in range(10):
+                try:
+                    reqs.append(eng.submit(_doc(i)))
+                except RejectedError:
+                    rejected += 1
+            hung = sum(0 if r.event.wait(30.0) else 1 for r in reqs)
+            assert hung == 0, f"{kind} x {policy}: {hung} hung requests"
+            assert plan.fired().get(kind, 0) >= 1
+            s = eng.stats()
+            failed = [r for r in reqs if "error" in r.result]
+            # every settled failure carries a reason and is counted
+            assert all("reason" in r.result for r in failed)
+            assert s["errors"] >= len(failed)
+            assert sum(s["errors_by_reason"].values()) == s["errors"]
+            assert s["requests"] == len(reqs) - len(failed)
+            # the engine survived: the fault schedule is exhausted and a
+            # fresh request is served
+            assert eng.workers_alive()
+            r = eng.infer(_doc(99), timeout=30.0)
+            assert "theta" in r
+        finally:
+            eng.stop()
+
+
+# ---------------------------------------------------------------------------
+# Admission control & backpressure
+# ---------------------------------------------------------------------------
+class TestAdmission:
+    def _stalled_engine(self, snap, **kw):
+        """max_batch=1 and a long slow_batch on the first dispatch: the
+        scheduler is pinned in batch #0 while tests fill the queue."""
+        return _engine(snap, max_batch=1, max_delay_ms=1.0,
+                       fault_plan=FaultPlan.parse("slow_batch@0:0.5"), **kw)
+
+    def test_reject_raises_structured_429(self, snap):
+        eng = self._stalled_engine(snap, max_queue=1, admission="reject")
+        try:
+            first = eng.submit(_doc(0))            # dispatches, stalls 0.5s
+            time.sleep(0.05)                       # let the scheduler take it
+            eng.submit(_doc(1))                    # fills the queue (depth 1)
+            with pytest.raises(RejectedError) as ei:
+                eng.submit(_doc(2))
+            assert ei.value.reason == "queue_full"
+            assert ei.value.queue_depth == 1 and ei.value.max_queue == 1
+            assert eng.stats()["rejected_by_reason"] == {"queue_full": 1}
+            assert first.event.wait(30.0)
+        finally:
+            eng.stop()
+
+    def test_shed_oldest_fails_victim_and_admits(self, snap):
+        eng = self._stalled_engine(snap, max_queue=1, admission="shed_oldest")
+        try:
+            eng.submit(_doc(0))
+            time.sleep(0.05)
+            victim = eng.submit(_doc(1))
+            newcomer = eng.submit(_doc(2))         # sheds the victim
+            assert victim.event.is_set()
+            assert victim.result["reason"] == "shed"
+            assert newcomer.event.wait(30.0)
+            assert "theta" in newcomer.result
+            assert eng.stats()["errors_by_reason"].get("shed") == 1
+        finally:
+            eng.stop()
+
+    def test_block_honors_submitters_deadline(self, snap):
+        """Blocked submit gives up (RejectedError reason=deadline) when the
+        request's own deadline lands before space frees up."""
+        eng = self._stalled_engine(snap, max_queue=1, admission="block")
+        try:
+            eng.submit(_doc(0))
+            time.sleep(0.05)
+            eng.submit(_doc(1))
+            t0 = time.perf_counter()
+            with pytest.raises(RejectedError) as ei:
+                eng.submit(_doc(2), deadline_ms=60.0)
+            assert ei.value.reason == "deadline"
+            assert time.perf_counter() - t0 < 0.45  # gave up at the deadline
+        finally:
+            eng.stop()
+
+    def test_block_backpressures_until_space(self, snap):
+        """Without a deadline, block waits — and the request then serves."""
+        eng = _engine(snap, max_batch=1, max_delay_ms=1.0, max_queue=1,
+                      admission="block",
+                      fault_plan=FaultPlan.parse("slow_batch@0:0.15"))
+        try:
+            eng.submit(_doc(0))
+            time.sleep(0.05)
+            eng.submit(_doc(1))
+            late = eng.submit(_doc(2))             # blocks ~0.1s, then admits
+            assert late.event.wait(30.0)
+            assert "theta" in late.result
+        finally:
+            eng.stop()
+
+    def test_saturation_flips_readiness(self, snap):
+        eng = self._stalled_engine(snap, max_queue=1, admission="reject")
+        try:
+            eng.submit(_doc(0))
+            time.sleep(0.05)
+            eng.submit(_doc(1))
+            health = eng.ready()
+            assert health["saturated"] and not health["ready"]
+            assert "saturated" in health["reasons"]
+            assert eng.stats()["saturated"] is True
+        finally:
+            eng.stop()
+        assert eng.ready()["reasons"][0] == "stopped"
+
+
+# ---------------------------------------------------------------------------
+# Deadlines & cancellation: dead requests never cost a device batch.
+# ---------------------------------------------------------------------------
+class TestDeadlinesAndCancellation:
+    def test_queued_deadline_expires_before_device_time(self, snap):
+        eng = _engine(snap, max_batch=1, max_delay_ms=1.0,
+                      fault_plan=FaultPlan.parse("slow_batch@0:0.3"))
+        try:
+            eng.submit(_doc(0))                    # pins the scheduler 0.3s
+            time.sleep(0.05)
+            doomed = eng.submit(_doc(1), deadline_ms=50.0)
+            assert doomed.event.wait(30.0)
+            assert doomed.result["reason"] == "expired"
+            s = eng.stats()
+            assert s["errors_by_reason"].get("expired") == 1
+        finally:
+            eng.stop()
+        # only the pinned batch ran — the expired request cost no batch
+        assert eng.stats()["batches"] == 1
+
+    def test_cancelled_request_is_skipped_at_batch_formation(self, snap):
+        """Regression for the old engine: a timed-out caller's request still
+        burned a full device batch.  Now cancel() settles the request and
+        the scheduler's reaper drops it before dispatch."""
+        eng = _engine(snap, max_batch=1, max_delay_ms=1.0,
+                      fault_plan=FaultPlan.parse("slow_batch@0:0.3"))
+        r0 = eng.submit(_doc(0))                   # batch #1, stalled
+        time.sleep(0.05)
+        req = eng.submit(_doc(1))
+        assert req.cancel()
+        assert r0.event.wait(30.0)                 # batch #1 lands
+        eng.stop()                                 # joins both workers
+        s = eng.stats()
+        assert s["batches"] == 1, "cancelled request burned a batch"
+        assert s["errors_by_reason"].get("cancelled") == 1
+
+    def test_infer_timeout_cancels(self, snap):
+        eng = _engine(snap, max_batch=1, max_delay_ms=1.0,
+                      fault_plan=FaultPlan.parse("slow_batch@0:0.4"))
+        with pytest.raises(TimeoutError):
+            eng.infer(_doc(0), timeout=0.05)
+        # the in-flight batch completes but the result is discarded —
+        # the caller's cancel won the settle race
+        eng.stop()                                 # joins both workers
+        s = eng.stats()
+        assert s["requests"] == 0
+        assert s["errors_by_reason"].get("cancelled") == 1
+
+    def test_default_deadline_from_config(self, snap):
+        eng = _engine(snap, max_batch=1, max_delay_ms=1.0,
+                      default_deadline_ms=50.0,
+                      fault_plan=FaultPlan.parse("slow_batch@0:0.3"))
+        try:
+            eng.submit(_doc(0))
+            time.sleep(0.05)
+            doomed = eng.submit(_doc(1))           # inherits the 50ms default
+            assert doomed.event.wait(30.0)
+            assert doomed.result["reason"] == "expired"
+        finally:
+            eng.stop()
+
+    def test_deadline_flush_beats_batch_timeout(self, snap):
+        """A tight deadline forces an early flush: the request is served
+        well before ``max_delay_ms`` would have flushed its batch."""
+        # generous slo_margin: the flush must beat the deadline even when
+        # cond.wait oversleeps (ms-scale on a busy CI box)
+        eng = _engine(snap, max_batch=8, max_delay_ms=10_000.0,
+                      slo_margin_ms=50.0)
+        try:
+            t0 = time.perf_counter()
+            r = eng.infer(_doc(0), timeout=30.0, deadline_ms=400.0)
+            assert "theta" in r
+            # flushed at ~the deadline, not at the 10s batch timeout
+            # (generous bound: first-call jit compile rides on top)
+            assert time.perf_counter() - t0 < 8.0
+            assert eng.stats()["deadline_flushes"] >= 1
+        finally:
+            eng.stop()
+
+
+# ---------------------------------------------------------------------------
+# OOM degradation ladder
+# ---------------------------------------------------------------------------
+class TestOOMFallback:
+    def test_retry_then_split_to_smaller_buckets(self, snap):
+        """First dispatch OOMs twice (initial + retry): the batch splits in
+        half, both halves serve, nobody fails."""
+        plan = FaultPlan.parse("device_oom@0x2")
+        eng = _engine(snap, max_batch=4, max_delay_ms=100.0, oom_retries=1,
+                      oom_backoff_ms=0.5, fault_plan=plan)
+        try:
+            out = eng.infer_many([_doc(i) for i in range(4)], timeout=60.0)
+            assert len(out) == 4 and all("theta" in r for r in out)
+            s = eng.stats()
+            assert s["oom_events"] == 2
+            assert s["oom_fallbacks"] == 1
+            assert s["batches"] == 2               # the two halves
+            assert s["errors"] == 0
+        finally:
+            eng.stop()
+
+    def test_oom_at_batch_one_fails_with_reason(self, snap):
+        plan = FaultPlan.parse("device_oom@0x2")
+        eng = _engine(snap, max_batch=1, oom_retries=1, oom_backoff_ms=0.5,
+                      fault_plan=plan)
+        try:
+            with pytest.raises(RuntimeError, match="out of memory"):
+                eng.infer(_doc(0), timeout=30.0)
+            s = eng.stats()
+            assert s["errors_by_reason"] == {"oom": 1}
+            # and the engine still serves once the schedule is exhausted
+            assert "theta" in eng.infer(_doc(1), timeout=30.0)
+        finally:
+            eng.stop()
+
+
+# ---------------------------------------------------------------------------
+# Worker supervision: restart budget, liveness, fail-fast
+# ---------------------------------------------------------------------------
+class TestWorkerSupervision:
+    def test_crash_fails_fast_and_restarts(self, snap):
+        plan = FaultPlan.parse("worker_crash@0")
+        eng = _engine(snap, fault_plan=plan)
+        try:
+            with pytest.raises(RuntimeError, match="crashed mid-batch"):
+                eng.infer(_doc(0), timeout=30.0)   # no timeout-length wait
+            deadline = time.perf_counter() + 10.0
+            while (eng.stats()["worker_restarts"] < 1
+                   and time.perf_counter() < deadline):
+                time.sleep(0.01)
+            s = eng.stats()
+            assert s["worker_restarts"] >= 1
+            assert s["errors_by_reason"].get("worker_crash") == 1
+            assert eng.workers_alive()
+            assert "theta" in eng.infer(_doc(1), timeout=30.0)
+        finally:
+            eng.stop()
+
+    def test_restart_budget_exhaustion_declares_dead(self, snap):
+        plan = FaultPlan.parse("worker_crash@0x10")
+        eng = _engine(snap, max_worker_restarts=1, fault_plan=plan)
+        try:
+            for i in range(2):                     # crash, restart, crash
+                with pytest.raises(RuntimeError):
+                    eng.infer(_doc(i), timeout=30.0)
+            eng._sched.join(timeout=10.0)
+            assert not eng.workers_alive()
+            health = eng.ready()
+            assert not health["ready"] and "worker_dead" in health["reasons"]
+            assert eng.stats()["worker_alive"] is False
+            with pytest.raises(RejectedError) as ei:
+                eng.submit(_doc(9))
+            assert ei.value.reason == "worker_dead"
+        finally:
+            eng.stop()
+
+    def test_worker_alive_false_after_clean_stop(self, snap):
+        eng = _engine(snap)
+        eng.infer(_doc(0), timeout=30.0)
+        eng.stop()
+        assert eng.stats()["worker_alive"] is False
+        assert eng.ready()["reasons"] == ["stopped", "worker_dead"]
+
+
+# ---------------------------------------------------------------------------
+# Publish rollback & shard integrity
+# ---------------------------------------------------------------------------
+class TestSnapshotFaults:
+    def test_publish_failure_rolls_back(self, snap):
+        model = HotSwapModel(snap,
+                             fault_plan=FaultPlan.parse("publish_failure@0"))
+        v0 = model.version
+        with pytest.raises(PublishError):
+            model.publish(snap)
+        assert model.version == v0                 # still the last good snap
+        assert model.publish_failures == 1
+        assert model.publish(snap) == v0 + 1       # next publish lands
+
+    def test_injected_shard_load_error(self, snap, tmp_path):
+        from repro.serve import load_sharded_snapshot, save_sharded_snapshot
+
+        path = str(tmp_path / "m.sharded")
+        save_sharded_snapshot(path, snap, num_shards=2)
+        with pytest.raises(SnapshotIntegrityError, match="injected"):
+            load_sharded_snapshot(
+                path, fault_plan=FaultPlan.parse("shard_load_error@0"))
+
+    def test_corrupt_shard_fails_crc(self, snap, tmp_path):
+        from repro.serve import assemble_sharded_snapshot, \
+            save_sharded_snapshot
+        from repro.serve.snapshot import _read_sharded
+
+        path = str(tmp_path / "m.sharded")
+        save_sharded_snapshot(path, snap, num_shards=2)
+        assemble_sharded_snapshot(path)            # clean load passes
+        shard = tmp_path / "m.sharded" / "shard_0001.npz"
+        raw = bytearray(shard.read_bytes())
+        raw[len(raw) // 2] ^= 0xFF                 # flip one byte
+        shard.write_bytes(bytes(raw))
+        with pytest.raises(SnapshotIntegrityError, match="crc32 mismatch"):
+            _read_sharded(path)
+
+
+# ---------------------------------------------------------------------------
+# Flood: 10x over capacity, bounded queue — every request settles.
+# ---------------------------------------------------------------------------
+class TestFlood:
+    def test_flood_settles_everything(self, snap):
+        eng = _engine(snap, max_batch=4, max_delay_ms=5.0, max_queue=8,
+                      admission="reject")
+        reqs, rejected = [], 0
+        try:
+            for i in range(80):
+                try:
+                    reqs.append(eng.submit(_doc(i), deadline_ms=10_000.0))
+                except RejectedError as e:
+                    assert e.reason == "queue_full"
+                    rejected += 1
+            hung = sum(0 if r.event.wait(60.0) else 1 for r in reqs)
+            assert hung == 0
+            s = eng.stats()
+            served = sum(1 for r in reqs if "error" not in r.result)
+            failed = len(reqs) - served
+            assert served + failed + rejected == 80
+            assert s["requests"] == served
+            assert s["rejected"] == rejected
+            assert s["queue_depth"] == 0.0
+        finally:
+            eng.stop()
+
+
+# ---------------------------------------------------------------------------
+# Labelled metrics exposition (obs satellite)
+# ---------------------------------------------------------------------------
+class TestLabelledExposition:
+    def test_exec_histogram_and_reason_counters_render(self, snap):
+        eng = _engine(snap, max_batch=2, fault_plan=FaultPlan.parse(
+            "worker_exception@0"))
+        try:
+            with pytest.raises(RuntimeError):
+                eng.infer(_doc(0), timeout=30.0)
+            eng.infer(_doc(1), timeout=30.0)
+            text = eng.obs.registry.render_prometheus()
+            assert 'repro_serve_errors_total{reason="exception"} 1' in text
+            # per-bucket exec-time family: labelled histogram series
+            assert 'repro_serve_batch_exec_ms_bucket{bucket="' in text
+            assert 'repro_serve_batch_exec_ms_count{bucket="' in text
+            per = eng._m_exec.per_label()
+            assert any(k.endswith("x16") for k in per)
+        finally:
+            eng.stop()
+
+
+# ---------------------------------------------------------------------------
+# HTTP surface: 429 on admission rejection, 503 healthz when dead/saturated
+# ---------------------------------------------------------------------------
+def _get(url):
+    with urllib.request.urlopen(url, timeout=10) as r:
+        return r.status, json.loads(r.read())
+
+
+def _post(url, payload):
+    req = urllib.request.Request(
+        url, data=json.dumps(payload).encode(),
+        headers={"Content-Type": "application/json"})
+    with urllib.request.urlopen(req, timeout=30) as r:
+        return r.status, json.loads(r.read())
+
+
+class TestHttpRobustness:
+    def _serve(self, snap, extra=()):
+        from repro.launch.serve_lda import (build_argparser, make_engine,
+                                            make_http_server)
+
+        args = build_argparser().parse_args(
+            ["--snapshot", "unused.npz", "--port", "0",
+             "--burn-in", "1", "--samples", "1",
+             "--length-buckets", "16"] + list(extra))
+        fault_plan = (FaultPlan.parse(args.fault_plan, seed=args.fault_seed)
+                      if args.fault_plan else None)
+        model, engine = make_engine(args, snap, fault_plan=fault_plan)
+        httpd = make_http_server(args, model, engine)
+        t = threading.Thread(target=httpd.serve_forever, daemon=True)
+        t.start()
+        base = f"http://127.0.0.1:{httpd.server_address[1]}"
+        return base, httpd, engine
+
+    def test_infer_429_when_rejected(self, snap):
+        base, httpd, engine = self._serve(
+            snap, ["--max-batch", "1", "--delay-ms", "1",
+                   "--max-queue", "1", "--admission", "reject",
+                   "--fault-plan", "slow_batch@0x3:0.5"])
+        try:
+            # fill: one dispatched (stalled), one queued
+            r1 = engine.submit(np.arange(8, dtype=np.int32))
+            time.sleep(0.05)
+            engine.submit(np.arange(8, dtype=np.int32))
+            with pytest.raises(urllib.error.HTTPError) as ei:
+                _post(base + "/infer", {"tokens": list(range(8))})
+            assert ei.value.code == 429
+            body = json.loads(ei.value.read())
+            assert body["reason"] == "queue_full"
+            assert body["queue_depth"] == 1 and body["max_queue"] == 1
+            assert r1.event.wait(30.0)
+        finally:
+            httpd.shutdown()
+            engine.stop()
+
+    def test_healthz_503_when_worker_dead(self, snap):
+        base, httpd, engine = self._serve(
+            snap, ["--max-batch", "1", "--delay-ms", "1",
+                   "--fault-plan", "worker_crash@0x9"])
+        # exhaust the restart budget (default 3): 4 crashing batches
+        try:
+            for i in range(4):
+                try:
+                    engine.infer(np.arange(8, dtype=np.int32), timeout=30.0)
+                except (RuntimeError, RejectedError):
+                    pass
+            engine._sched.join(timeout=10.0)
+            assert not engine.workers_alive()
+            with pytest.raises(urllib.error.HTTPError) as ei:
+                _get(base + "/healthz")
+            assert ei.value.code == 503
+            body = json.loads(ei.value.read())
+            assert body["ok"] is False
+            assert "worker_dead" in body["reasons"]
+        finally:
+            httpd.shutdown()
+            engine.stop()
